@@ -1,0 +1,71 @@
+"""Paper Fig. 19: ablation of BRCR / BSTC / BGPP latency contributions.
+
+CPU has no TPU clock, so latency is modeled through the roofline terms the
+techniques move (the same accounting as EXPERIMENTS.md §Roofline):
+
+  baseline    : dense INT8 compute + raw weight bytes + full KV fetch
+  +BRCR       : compute term × measured add-reduction (prefill-bound)
+  +BSTC       : weight bytes ÷ measured CR           (decode weight-bound)
+  +BGPP       : KV bytes × measured alive fraction   (decode KV-bound)
+
+Reported per the paper's two regimes: long-prompt summarization (prefill-
+dominant) and generation (decode-dominant).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.analysis.roofline import V5E
+from repro.core import bgpp, brcr, bstc
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+
+def run():
+    rng = np.random.default_rng(5)
+    w_q, scale = synthetic_llm_weight_int8(rng, (64, 2048))
+    cost = brcr.brcr_cost(jnp.asarray(w_q), m=4)
+    add_reduction = cost.adds_total / cost.adds_bsc_baseline
+    bw = bstc.encode_weight(w_q, scale)
+    cr = bw.compression_ratio
+
+    S, D = 2048, 128
+    k = np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127).astype(np.int32)
+    sign = jnp.asarray((k < 0).astype(np.uint8))
+    mag = np.abs(k).astype(np.uint8)
+    planes = jnp.asarray(np.stack([(mag >> p) & 1 for p in range(7)]).astype(np.uint8))
+    q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+    alive, _, stats = bgpp.bgpp_predict(
+        q, planes, sign, bgpp.BGPPConfig(rounds=4, alpha=0.55),
+        logit_scale=1.0 / np.sqrt(D) / 900.0,
+    )
+    alive_frac = float(jnp.mean(alive.astype(jnp.float32)))
+    predict_frac = float(stats.predict_bytes) / (S * D)
+
+    # toy 7B-ish single-chip model: per-token decode, per-seq prefill
+    n_params = 7e9
+    seq = 4096
+    t_prefill_compute = 2 * n_params * seq / V5E.peak_flops
+    t_decode_weights = n_params / V5E.hbm_bw  # int8 bytes/token
+    t_decode_kv = 32 * S * 2 * 8 * D / V5E.hbm_bw  # 32L × K+V × 8kv × D int8
+
+    base = t_prefill_compute + seq / 8 * (t_decode_weights + t_decode_kv)
+    brcr_t = t_prefill_compute * add_reduction + seq / 8 * (
+        t_decode_weights + t_decode_kv
+    )
+    bstc_t = t_prefill_compute * add_reduction + seq / 8 * (
+        t_decode_weights / cr + t_decode_kv
+    )
+    bgpp_t = t_prefill_compute * add_reduction + seq / 8 * (
+        t_decode_weights / cr + t_decode_kv * (alive_frac + predict_frac / 8)
+    )
+    emit("fig19_baseline", 0.0, f"model_s={base:.4f}")
+    emit("fig19_plus_brcr", 0.0,
+         f"model_s={brcr_t:.4f};speedup={base/brcr_t:.2f}x;adds_ratio={add_reduction:.3f}")
+    emit("fig19_plus_bstc", 0.0,
+         f"model_s={bstc_t:.4f};speedup={base/bstc_t:.2f}x;CR={cr:.2f}")
+    emit("fig19_plus_bgpp", 0.0,
+         f"model_s={bgpp_t:.4f};speedup={base/bgpp_t:.2f}x;alive={alive_frac:.3f}")

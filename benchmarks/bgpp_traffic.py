@@ -1,0 +1,51 @@
+"""Paper Fig. 5(g) + Fig. 24(a): BGPP KV-traffic reduction vs alpha, and the
+sparsity/recall trade-off that motivates alpha in [0.5, 0.6]."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import bgpp
+
+
+def run():
+    rng = np.random.default_rng(4)
+    S, D = 2048, 128
+    k = np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127).astype(np.int32)
+    sign = jnp.asarray((k < 0).astype(np.uint8))
+    mag = np.abs(k).astype(np.uint8)
+    planes = jnp.asarray(np.stack([(mag >> p) & 1 for p in range(7)]).astype(np.uint8))
+    q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+    scale = 1.0 / np.sqrt(D) / 900.0
+    true_scores = k @ np.asarray(q)
+    top32 = set(np.argsort(true_scores)[-32:].tolist())
+
+    # kernel-path traffic model (paper Fig. 5g analogue on the TPU target)
+    from repro.analysis.roofline import bgpp_kernel_traffic
+
+    for keep in (0.125, 0.25, 0.5):
+        kt = bgpp_kernel_traffic(32768, 128, rounds=4, keep_ratio=keep)
+        emit(
+            f"fig5g_kernel_traffic_keep{keep}", 0.0,
+            f"bytes={kt['bgpp_kernel_bytes']:.0f};dense={kt['dense_int8_bytes']:.0f};"
+            f"reduction={kt['reduction']:.2f}x",
+        )
+
+    full_bytes = S * D  # 8-bit fetch of every key
+    for alpha in (0.3, 0.4, 0.5, 0.55, 0.6, 0.8):
+        alive, _, stats = bgpp.bgpp_predict(
+            q, planes, sign,
+            bgpp.BGPPConfig(rounds=4, alpha=alpha), logit_scale=scale,
+        )
+        kept = np.flatnonzero(np.asarray(alive))
+        recall = len(top32 & set(kept.tolist())) / 32
+        sparsity = 1 - len(kept) / S
+        traffic = float(stats.predict_bytes) / full_bytes
+        emit(
+            f"fig24a_alpha{alpha}", 0.0,
+            f"sparsity={sparsity:.3f};top32_recall={recall:.3f};"
+            f"predict_traffic_frac={traffic:.3f}",
+        )

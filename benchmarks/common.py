@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing + CSV emission per the repo contract
+(``name,us_per_call,derived``)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def emit_header():
+    print("name,us_per_call,derived")

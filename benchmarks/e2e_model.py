@@ -1,0 +1,63 @@
+"""Paper Fig. 20/21 (modeled): end-to-end speedup/efficiency breakdown.
+
+The paper's throughput/energy wins are ASIC-vs-GPU numbers; on the TPU
+target we report the same *structure* — per-technique multiplier stack —
+using measured algorithm statistics plugged into the v5e roofline:
+
+  speedup(prefill) = add-reduction headroom (BRCR)        [compute-bound]
+  speedup(decode)  = weight-CR (BSTC) ∘ KV-alive (BGPP)   [memory-bound]
+
+plus a measured wall-clock of the real serving engine on the smoke config
+(CPU; relative before/after enabling the MCBP KV path).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core import bgpp, brcr, bstc
+from repro.models import model_zoo
+from repro.serving import engine, kv_cache as kvc
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+
+def run():
+    rng = np.random.default_rng(7)
+
+    # modeled multiplier stack (paper Fig. 21 analogue)
+    w_q, scale = synthetic_llm_weight_int8(rng, (64, 2048))
+    cost = brcr.brcr_cost(jnp.asarray(w_q), m=4)
+    cr = bstc.encode_weight(w_q, scale).compression_ratio
+    S, D = 2048, 128
+    k = np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127).astype(np.int32)
+    sign = jnp.asarray((k < 0).astype(np.uint8))
+    mag = np.abs(k).astype(np.uint8)
+    planes = jnp.asarray(np.stack([(mag >> p) & 1 for p in range(7)]).astype(np.uint8))
+    q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+    alive, _, _ = bgpp.bgpp_predict(
+        q, planes, sign, bgpp.BGPPConfig(rounds=4, alpha=0.55),
+        logit_scale=1.0 / np.sqrt(D) / 900.0,
+    )
+    alive_frac = float(jnp.mean(alive.astype(jnp.float32)))
+    emit("fig21_brcr_compute_multiplier", 0.0,
+         f"{cost.adds_bsc_baseline/cost.adds_total:.2f}x_op_reduction")
+    emit("fig21_bstc_weight_multiplier", 0.0, f"{cr:.2f}x_weight_traffic")
+    emit("fig21_bgpp_kv_multiplier", 0.0, f"{1/max(alive_frac,1e-3):.2f}x_kv_traffic")
+    emit("fig20_decode_modeled_speedup", 0.0,
+         f"{(0.6*cr + 0.4/max(alive_frac,1e-3)):.2f}x_weighted(w=0.6kv=0.4)")
+
+    # measured serve_step wall-clock, int8 vs bgpp cache (smoke config)
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for fmt in ("int8", "bgpp"):
+        layout = kvc.layout_for(cfg, 2, 128, kv_format=fmt)
+        cache, _ = kvc.init_cache(cfg, layout)
+        step = jax.jit(engine.make_serve_step(cfg, layout))
+        us = time_fn(lambda c=cache: step(params, c, tok)[0], iters=5)
+        emit(f"fig20_serve_step_{fmt}_smoke_cpu", us, "wall_clock_smoke")

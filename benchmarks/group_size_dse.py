@@ -1,0 +1,37 @@
+"""Paper Fig. 18: design-space exploration of the group size m.
+
+Sweeps m over 1..8 and reports computation reduction (CPR, vs dense) and
+compression rate (CR) on LLM-statistics weights.  The paper finds CPR peaks
+around m=5 and CR around m=4, and picks m=4.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import brcr, bstc
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+
+def run():
+    rng = np.random.default_rng(2)
+    w_q, scale = synthetic_llm_weight_int8(rng, (64, 2048))
+    w_j = jnp.asarray(w_q)
+
+    best_cpr, best_cr = None, None
+    for m in range(1, 9):
+        M = (w_q.shape[0] // m) * m
+        cost = brcr.brcr_cost(w_j[:M], m=m)
+        cpr = cost.macs_dense / max(cost.adds_total, 1)
+        bw = bstc.encode_weight(w_q[:M], scale[:M], m=m)
+        cr = bw.compression_ratio
+        emit(f"fig18_m{m}", 0.0, f"CPR={cpr:.3f};CR={cr:.3f}")
+        if best_cpr is None or cpr > best_cpr[1]:
+            best_cpr = (m, cpr)
+        if best_cr is None or cr > best_cr[1]:
+            best_cr = (m, cr)
+    emit("fig18_best", 0.0,
+         f"CPR_peak_m={best_cpr[0]};CR_peak_m={best_cr[0]};paper_picks_m=4")

@@ -1,0 +1,42 @@
+"""Kernel micro-benchmarks (interpret-mode wall clock is NOT TPU time; the
+derived column carries the structural numbers that transfer: HBM bytes
+moved, compression ratios, op counts)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.brcr_gemm import brcr_gemm, prepare_brcr_operands
+from repro.kernels.bstc_matmul import bstc_matmul, prepare_bstc_matmul_operands
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+
+def run():
+    rng = np.random.default_rng(8)
+    M, H, N = 64, 1024, 32
+    w_q, scale = synthetic_llm_weight_int8(rng, (M, H))
+    x = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+
+    ops_brcr = prepare_brcr_operands(w_q, m=4)
+    us = time_fn(
+        lambda: brcr_gemm(ops_brcr, x, tile_m=32, tile_k=256, tile_n=32,
+                          interpret=True),
+        iters=3, warmup=1,
+    )
+    idx_bytes = ops_brcr.group_idx.size
+    emit("kernel_brcr_gemm_interp", us,
+         f"M{M}xH{H}xN{N};idx_bytes={idx_bytes}")
+
+    ops_bstc = prepare_bstc_matmul_operands(w_q, scale, tile_k=512)
+    us = time_fn(
+        lambda: bstc_matmul(ops_bstc, x, tile_m=32, tile_n=32, interpret=True),
+        iters=3, warmup=1,
+    )
+    emit(
+        "kernel_bstc_matmul_interp", us,
+        f"hbm_bytes={ops_bstc.hbm_bytes};dense_bytes={ops_bstc.dense_bytes};"
+        f"CR={ops_bstc.compression_ratio:.3f}",
+    )

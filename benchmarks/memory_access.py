@@ -1,0 +1,74 @@
+"""Paper Fig. 17(b): normalized decoding-stage memory access.
+
+Weight traffic under: raw INT8 / BSTC two-state coding (paper) — plus the
+paper's value-level Huffman-like baseline proxy (run-length on zero values,
+as FuseKNA) — and KV traffic under value-level top-k vs BGPP progressive
+prediction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import bgpp, bstc, topk
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+
+def _value_rle_bits(w: np.ndarray) -> int:
+    """FuseKNA-style value-level run-length coding proxy: 8b literal +
+    run-length byte for zero runs."""
+    flat = w.reshape(-1)
+    bits = 0
+    run = 0
+    for v in flat:
+        if v == 0:
+            run += 1
+            if run == 255:
+                bits += 16
+                run = 0
+        else:
+            if run:
+                bits += 16
+                run = 0
+            bits += 8
+    if run:
+        bits += 16
+    return bits
+
+
+def run():
+    rng = np.random.default_rng(1)
+    w_q, _ = synthetic_llm_weight_int8(rng, (256, 1024))
+
+    raw_bits = w_q.size * 8
+    bw = bstc.encode_weight(w_q, np.ones(256, np.float32))
+    rle_bits = _value_rle_bits(w_q[:16])  # sampled rows (slow python loop)
+    rle_bits = rle_bits * (w_q.shape[0] // 16)
+
+    emit("fig17b_weight_raw_int8", 0.0, f"bits={raw_bits}")
+    emit("fig17b_weight_value_rle", 0.0,
+         f"bits={rle_bits};ratio={raw_bits/max(rle_bits,1):.3f}")
+    emit("fig17b_weight_bstc", 0.0,
+         f"bits={bw.encoded_bits};CR={bw.compression_ratio:.3f}")
+
+    # KV prediction traffic: value top-k vs BGPP (paper Fig. 5g)
+    S, D = 1024, 128
+    k = np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127).astype(np.int32)
+    sign = jnp.asarray((k < 0).astype(np.uint8))
+    mag = np.abs(k).astype(np.uint8)
+    planes = jnp.asarray(np.stack([(mag >> p) & 1 for p in range(7)]).astype(np.uint8))
+    q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+    scale = 1.0 / np.sqrt(D) / 900.0
+
+    _, _, vstats = topk.value_topk_predict(q, jnp.asarray(k, jnp.int8), k_keep=64)
+    alive, _, bstats = bgpp.bgpp_predict(
+        q, planes, sign, bgpp.BGPPConfig(rounds=4, alpha=0.55), logit_scale=scale
+    )
+    vb = float(vstats.predict_bytes)
+    bb = float(bstats.predict_bytes)
+    emit("fig17b_kv_value_topk_predict", 0.0, f"bytes={vb:.0f}")
+    emit("fig17b_kv_bgpp_predict", 0.0,
+         f"bytes={bb:.0f};saving={100*(1-bb/vb):.1f}%;alive={int(alive.sum())}/{S}")

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (wall-clock is CPU/interpret-mode;
+the derived column carries the paper-comparable statistics).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit_header
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_latency,
+        bgpp_traffic,
+        bstc_compression,
+        computation_reduction,
+        e2e_model,
+        group_size_dse,
+        kernel_bench,
+        memory_access,
+        quant_fidelity,
+    )
+
+    modules = [
+        ("fig17a", computation_reduction),
+        ("fig17b", memory_access),
+        ("fig18", group_size_dse),
+        ("fig8", bstc_compression),
+        ("fig24a", bgpp_traffic),
+        ("fig19", ablation_latency),
+        ("tab2", quant_fidelity),
+        ("fig20", e2e_model),
+        ("kernels", kernel_bench),
+    ]
+    emit_header()
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

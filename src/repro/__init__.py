@@ -1,0 +1,9 @@
+"""repro — MCBP (MICRO 2025) bit-slice LLM framework on JAX + Pallas.
+
+Layers: ``core`` (paper algorithms), ``kernels`` (Pallas TPU), ``models``
+(10-arch zoo), ``distributed``/``optim``/``training``/``serving``/``data``/
+``checkpoint``/``runtime`` (substrates), ``configs`` + ``launch`` (entry
+points, multi-pod dry-run).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,430 @@
+"""Text-level HLO cost model with while-loop (scan) trip multipliers.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body ONCE, so any
+scan-over-layers graph undercounts FLOPs/bytes by ~num_layers×.  This module
+parses the post-optimization HLO text, recovers each loop's trip count from
+its condition computation (counter < constant), propagates multipliers
+through nesting, and accumulates:
+
+  * ``dot_flops``  — 2 · prod(result dims) · prod(contracting dims), the MXU
+    term of the roofline (validated against cost_analysis on loop-free
+    decode graphs in tests);
+  * ``bytes``      — operand+result bytes of every top-level op (fusion
+    internals excluded — a fusion's traffic is its boundary), the HBM term.
+
+Collective accounting lives in ``repro.analysis.roofline`` and reuses the
+same multiplier logic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s2|u2|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|token)\[([0-9,]*)\]"
+)
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.+)$")
+_NAME_RE = re.compile(r"%[\w\.\-]+")
+
+
+def _split_type_op(rhs: str):
+    """'(s32[], f32[..] /*index=5*/ ...) while(%x), ...' ->
+    (type_str, opcode, rest_after_open_paren) or None."""
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rhs[: i + 1]
+                    rest = rhs[i + 1 :].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rhs[:sp], rhs[sp + 1 :].lstrip()
+    m = re.match(r"([a-z][a-z0-9\-]*)\(", rest)
+    if not m:
+        return None
+    return type_str, m.group(1), rest[m.end() :]
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "while", "conditional", "call",
+    "copy-done", "all-reduce-done", "all-gather-done", "collective-permute-done",
+}
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(
+            _DTYPE_BYTES[d] * _prod(dims) for d, dims in self.result_shapes
+        )
+
+
+def _prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for d, dims in _SHAPE_RE.findall(text):
+        t = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((d, t))
+    return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_entry: bool = False
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.op_index: Dict[str, Op] = {}
+        self._parse(text)
+        self._resolve_multipliers()
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        comp: Optional[Computation] = None
+        for raw in text.splitlines():
+            s = raw.strip()
+            if not s or s.startswith("//"):
+                continue
+            # computation headers: "%name (params) -> type {" with no " = "
+            if " = " not in s and s.endswith("{"):
+                m = re.match(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(", s)
+                if m:
+                    comp = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+                    self.computations[comp.name] = comp
+                    continue
+            md = _DEF_RE.match(s)
+            if md and comp is not None and " = " in s:
+                name, rhs = md.group(1), md.group(2)
+                parts = _split_type_op(rhs)
+                if parts is None:
+                    continue
+                type_str, opcode, args = parts
+                # operand list ends at the first top-level ')'
+                depth = 1
+                for i, ch in enumerate(args):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            attrs = args[i + 1 :]
+                            args = args[:i]
+                            break
+                else:
+                    attrs = ""
+                op = Op(
+                    name=name,
+                    opcode=opcode,
+                    result_shapes=_parse_shapes(type_str),
+                    operands=_NAME_RE.findall(args),
+                    attrs=attrs,
+                    line=s,
+                )
+                comp.ops.append(op)
+                self.op_index[name] = op
+
+    # --------------------------------------------------- loop multipliers
+    def _trip_count(self, cond_name: str) -> int:
+        cond = self.computations.get(cond_name)
+        if cond is None:
+            return 1
+        consts = {
+            o.name: int(m.group(1))
+            for o in cond.ops
+            if o.opcode == "constant"
+            and (m := re.search(r"constant\((\d+)\)", o.line))
+        }
+        # ROOT op's constant operand is the bound (counter < bound)
+        root = cond.ops[-1]
+        for nm in root.operands:
+            if nm in consts:
+                return consts[nm]
+            # wrapped_compare fusion: look one level in
+            inner = self.op_index.get(nm)
+            if inner is not None:
+                for nm2 in inner.operands:
+                    if nm2 in consts:
+                        return consts[nm2]
+        return max(consts.values(), default=1)
+
+    def _resolve_multipliers(self):
+        self.mult: Dict[str, float] = {}
+        self.fused: set = set()
+        entry = next(
+            (c.name for c in self.computations.values() if c.is_entry), None
+        )
+        if entry is None and self.computations:
+            entry = next(iter(self.computations))
+        # computations referenced as fusion/reduce bodies are "inline"
+        for c in self.computations.values():
+            for op in c.ops:
+                for key in ("calls=", "to_apply="):
+                    if key in op.attrs:
+                        for nm in _NAME_RE.findall(op.attrs.split(key, 1)[1].split(",")[0]):
+                            self.fused.add(nm)
+
+        seen = set()
+
+        def visit(name: str, k: float):
+            self.mult[name] = self.mult.get(name, 0.0) + k
+            if name in seen:
+                return
+            seen.add(name)
+            comp = self.computations.get(name)
+            if comp is None:
+                return
+            for op in comp.ops:
+                if op.opcode == "while":
+                    body = re.search(r"body=(%[\w\.\-]+)", op.attrs)
+                    cond = re.search(r"condition=(%[\w\.\-]+)", op.attrs)
+                    tm = re.search(r'known_trip_count[":{\\]+n[":\\]+(\d+)', op.attrs)
+                    if tm:
+                        trip = int(tm.group(1))
+                    else:
+                        trip = self._trip_count(cond.group(1)) if cond else 1
+                    if body:
+                        visit(body.group(1), self.mult[name] * trip)
+                elif op.opcode in ("call", "conditional", "async-start"):
+                    for nm in _NAME_RE.findall(op.attrs):
+                        if nm in self.computations and nm not in self.fused:
+                            visit(nm, self.mult[name])
+
+        if entry:
+            visit(entry, 1.0)
+
+    # ------------------------------------------------------------- costs
+    # ops that don't move HBM bytes when fused into a consumer: dtype
+    # converts and layout relabels.  transpose/copy are NOT here — those
+    # materialize on TPU too (see §Perf A1, which removed one at the source).
+    _CAST_OPS = {"convert", "bitcast", "reshape",
+                 "parameter", "tuple", "get-tuple-element"}
+
+    def _fusion_comp(self, op: Op) -> Optional[Computation]:
+        m = re.search(r"calls=(%[\w\.\-]+)", op.attrs)
+        return self.computations.get(m.group(1)) if m else None
+
+    def _is_pure_cast(self, op: Op) -> bool:
+        """Fusion that only converts dtype / relabels layout / slices.  The
+        CPU backend materializes these (e.g. it upcasts int8 dot operands to
+        s32/f32); a TPU feeds the MXU in-flight — charge the bytes actually
+        read (slice sizes at source dtype) instead."""
+        if op.opcode in ("convert", "bitcast", "reshape"):
+            return True
+        if op.opcode != "fusion":
+            return False
+        comp = self._fusion_comp(op)
+        if comp is None:
+            return False
+        allowed = self._CAST_OPS | {"slice", "dynamic-slice"}
+        return all(o.opcode in allowed for o in comp.ops)
+
+    def _operand_bytes(self, name: str) -> float:
+        """Bytes a consumer actually pulls for this operand: see through
+        pure-cast producers to what they actually read."""
+        src = self.op_index.get(name)
+        if src is None or src.opcode == "constant":
+            return 0.0
+        if self._is_pure_cast(src):
+            comp = self._fusion_comp(src) if src.opcode == "fusion" else None
+            if comp is not None:
+                slices = [
+                    o for o in comp.ops if o.opcode in ("slice", "dynamic-slice")
+                ]
+                if slices:
+                    return float(sum(s.result_bytes for s in slices))
+            return float(sum(self._operand_bytes(nm) for nm in src.operands))
+        return float(src.result_bytes)
+
+    def _fusion_param_charges(self, comp: Computation) -> Dict[int, float]:
+        """parameter index -> byte charge multiplier source.
+
+        A fused parameter consumed ONLY by (dynamic-)slice ops is charged at
+        the slice sizes (a real TPU reads only the slice), not the full
+        operand — the python-loop per-layer cache reads hit this.  Returns
+        {param_index: bytes or -1.0 for 'full operand'}.
+        """
+        if not hasattr(self, "_fp_cache"):
+            self._fp_cache: Dict[str, Dict[int, float]] = {}
+        if comp.name in self._fp_cache:
+            return self._fp_cache[comp.name]
+        params: Dict[str, int] = {}
+        for o in comp.ops:
+            if o.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o.line)
+                if m:
+                    params[o.name] = int(m.group(1))
+        charges: Dict[int, float] = {}
+        for pname, idx in params.items():
+            consumers = [o for o in comp.ops if pname in o.operands]
+            if consumers and all(
+                c.opcode in ("slice", "dynamic-slice") for c in consumers
+            ):
+                charges[idx] = float(sum(c.result_bytes for c in consumers))
+            else:
+                charges[idx] = -1.0
+        self._fp_cache[comp.name] = charges
+        return charges
+
+    def _op_traffic(self, op: Op) -> float:
+        """HBM bytes attributed to one top-level op (in-place/slice/cast
+        aware — see the per-case comments)."""
+        if op.opcode in _SKIP_BYTES_OPS:
+            return 0.0
+        if op.opcode == "dynamic-update-slice":
+            upd = self.op_index.get(op.operands[1]) if len(op.operands) > 1 else None
+            return 2.0 * (upd.result_bytes if upd else 0)
+        if op.opcode in ("dynamic-slice", "slice"):
+            return 2.0 * op.result_bytes
+        if op.opcode == "broadcast":
+            return float(op.result_bytes)
+        if self._is_pure_cast(op):
+            return 0.0  # charged at the consumer via _operand_bytes
+        if op.opcode == "fusion":
+            comp = self._fusion_comp(op)
+            root = comp.ops[-1] if comp and comp.ops else None
+            charges = self._fusion_param_charges(comp) if comp else {}
+            in_place_dus = root is not None and root.opcode == "dynamic-update-slice"
+            if in_place_dus:
+                # in-place cache write: the big buffer aliases through; only
+                # the update slice (+ index math) actually moves
+                sizes = [
+                    self._operand_bytes(nm)
+                    for nm in op.operands
+                    if nm in self.op_index
+                    and self.op_index[nm].opcode != "constant"
+                ]
+                big = max(sizes, default=0)
+                return 2.0 * max(sum(sizes) - big, 0)
+            b = float(op.result_bytes)
+            for i, nm in enumerate(op.operands):
+                src = self.op_index.get(nm)
+                if src is None or src.opcode == "constant":
+                    continue
+                c = charges.get(i, -1.0)
+                b += self._operand_bytes(nm) if c < 0 else c
+            return b
+        b = float(op.result_bytes)
+        for nm in op.operands:
+            b += self._operand_bytes(nm)
+        return b
+
+    def dot_flops(self) -> float:
+        total = 0.0
+        for cname, comp in self.computations.items():
+            k = self.mult.get(cname, 0.0)
+            if k == 0.0 and cname in self.fused:
+                # dots rarely live in fusions on CPU; attribute ×1 if found
+                k = 1.0
+            if k == 0.0:
+                continue
+            for op in comp.ops:
+                if op.opcode != "dot":
+                    continue
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+                cdims = (
+                    tuple(int(x) for x in m.group(1).split(",") if x) if m else ()
+                )
+                lhs = self.op_index.get(op.operands[0])
+                kdim = 1
+                if lhs is not None and lhs.result_shapes:
+                    ldims = lhs.result_shapes[0][1]
+                    for c in cdims:
+                        if c < len(ldims):
+                            kdim *= ldims[c]
+                total += k * 2.0 * _prod(op.result_shapes[0][1]) * kdim
+        return total
+
+    def traffic_bytes(self) -> float:
+        total = 0.0
+        for cname, comp in self.computations.items():
+            if cname in self.fused:
+                continue  # fusion internals: traffic is the fusion boundary
+            k = self.mult.get(cname, 0.0)
+            if k == 0.0:
+                continue
+            for op in comp.ops:
+                total += k * self._op_traffic(op)
+        return total
+
+    def while_summary(self) -> Dict[str, float]:
+        return {
+            c: m for c, m in self.mult.items()
+            if m > 1.0 and c in self.computations
+        }
+
+    def top_ops_by_bytes(self, n: int = 20):
+        """(bytes×mult, opcode, op name, comp) — traffic hot spots."""
+        rows = []
+        for cname, comp in self.computations.items():
+            if cname in self.fused:
+                continue
+            k = self.mult.get(cname, 0.0)
+            if k == 0.0:
+                continue
+            for op in comp.ops:
+                b = self._op_traffic(op)
+                if b:
+                    rows.append((k * b, op.opcode, op.name, cname))
+        rows.sort(reverse=True)
+        return rows[:n]
+
+    def collective_bytes(self) -> Dict[str, float]:
+        """Operand bytes of collectives, by kind, × loop multipliers."""
+        kinds = (
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute", "collective-broadcast", "ragged-all-to-all",
+        )
+        out = {k: 0.0 for k in kinds}
+        out["total"] = 0.0
+        for cname, comp in self.computations.items():
+            k = self.mult.get(cname, 0.0)
+            if k == 0.0:
+                continue
+            for op in comp.ops:
+                base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+                if base not in kinds or op.opcode.endswith("-done"):
+                    continue
+                b = 0.0
+                for nm in op.operands:
+                    src = self.op_index.get(nm)
+                    if src is not None:
+                        b += src.result_bytes
+                out[base] += k * b
+                out["total"] += k * b
+        return out

@@ -1,0 +1,73 @@
+"""Summarize dry-run JSON results into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.analysis.summarize [--dir experiments/dryrun/16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return rows
+
+
+def fmt_row(r, md=False):
+    sep = " | " if md else "  "
+    if r["status"] != "ok":
+        cells = [f"{r['arch']:<24}", f"{r['shape']:<12}", "SKIP", r.get("reason", "")]
+        return sep.join(cells)
+    m = r.get("memory_analysis") or {}
+    cells = [
+        f"{r['arch']:<24}",
+        f"{r['shape']:<12}",
+        f"{r['t_compute_s']:.3e}",
+        f"{r['t_memory_s']:.3e}",
+        f"{r['t_collective_s']:.3e}",
+        f"{r['bottleneck']:<10}",
+        f"{r['useful_flops_ratio']:.2f}",
+        f"{r['roofline_fraction']:.3f}",
+        f"{m.get('per_device_gb', '?')}",
+    ]
+    return sep.join(str(c) for c in cells)
+
+
+HEADER = [
+    "arch", "shape", "t_compute", "t_memory", "t_collect", "bottleneck",
+    "useful", "roofline", "mem_GB",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun/16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    sep = " | " if args.md else "  "
+    hdr = sep.join(
+        h.ljust(w)
+        for h, w in zip(HEADER, (24, 12, 9, 9, 9, 10, 6, 8, 6))
+    )
+    if args.md:
+        print("| " + hdr + " |")
+        print("|" + "---|" * len(HEADER))
+        for r in rows:
+            print("| " + fmt_row(r, md=True) + " |")
+    else:
+        print(hdr)
+        for r in rows:
+            print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

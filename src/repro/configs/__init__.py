@@ -1,0 +1,16 @@
+from repro.configs.base import ARCH_REGISTRY, MCBPOptions, ModelConfig, get_config  # noqa: F401
+from repro.configs import shapes  # noqa: F401
+
+# import for registry side effects
+from repro.configs import (  # noqa: F401
+    deepseek_7b,
+    gemma3_1b,
+    gemma3_4b,
+    jamba_1_5_large_398b,
+    llama4_scout_17b_a16e,
+    mamba2_1_3b,
+    mixtral_8x22b,
+    paligemma_3b,
+    phi4_mini_3_8b,
+    whisper_medium,
+)

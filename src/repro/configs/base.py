@@ -1,0 +1,188 @@
+"""Model configuration schema + architecture registry.
+
+One ``ModelConfig`` drives every family in the zoo (dense/GQA transformer,
+MoE, SSM, hybrid, encoder-decoder, VLM).  Each assigned architecture file
+registers its exact published config plus a reduced ``smoke`` variant used by
+the CPU smoke tests (the full config is only ever lowered via the dry-run's
+ShapeDtypeStructs — no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+# --------------------------------------------------------------------------
+# MCBP feature switches (the paper's three techniques).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MCBPOptions:
+    enabled: bool = False
+    # BRCR
+    group_size: int = 4  # paper §5.2 DSE: m=4
+    weight_bits: int = 8  # INT8 weights (7 magnitude bits + sign)
+    # BSTC
+    bstc_weights: bool = False  # serve from two-state-coded weights
+    bstc_threshold: float = 0.65
+    # BGPP
+    bgpp_attention: bool = False  # progressive bit-grained top-k on decode
+    bgpp_rounds: int = 4
+    bgpp_alpha: float = 0.55  # paper §6: 0.5-0.6
+    bgpp_radius: float = 3.0
+    bgpp_keep_ratio: float = 0.25  # k_max = ceil(ratio * S) for static gather
+    # weight numerics for serving: "bf16" | "int8" | "bstc"
+    weight_format: str = "bf16"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | enc_dec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention structure
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 0.0  # gemma3: local layers use a different base
+    sliding_window: int = 0  # window for local layers (0 = none)
+    global_every: int = 0  # layer i is global iff (i+1) % global_every == 0
+    chunk_attention: int = 0  # llama4 chunked-local size (0 = off)
+    attn_logit_softcap: float = 0.0
+    qk_norm: bool = False
+    embed_scale: bool = False  # gemma: multiply embeddings by sqrt(d_model)
+    post_norms: bool = False  # gemma3 sandwich norms
+
+    # FFN / MoE
+    activation: str = "swiglu"  # swiglu | geglu | gelu
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # layer i is MoE iff num_experts>0 and i % moe_every == moe_offset
+    moe_offset: int = 0
+    moe_shared_ff: int = 0  # llama4 shared expert width (0 = none)
+    moe_capacity_factor: float = 1.25  # GShard capacity (smokes use dropless)
+
+    # SSM (mamba2 / jamba)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0  # hybrid: layer i is attention iff i % attn_every == attn_offset
+    attn_offset: int = 0
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # fixed encoder length (1500 frames post-conv)
+    d_audio: int = 0  # stub frontend embedding width
+
+    # VLM (paligemma)
+    vision_tokens: int = 0
+    d_vision: int = 0
+
+    norm: str = "rms"  # rms | ln
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+
+    mcbp: MCBPOptions = MCBPOptions()
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def layer_is_global_attn(self, i: int) -> bool:
+        if self.sliding_window <= 0:
+            return self.chunk_attention <= 0  # chunked archs: global_every rule
+        if self.global_every <= 0:
+            return False
+        return (i + 1) % self.global_every == 0
+
+    def layer_attn_window(self, i: int) -> Tuple[str, int]:
+        """(mask_kind, window) for layer i."""
+        if self.chunk_attention > 0:
+            if self.global_every > 0 and (i + 1) % self.global_every == 0:
+                return ("causal", 0)
+            return ("chunked", self.chunk_attention)
+        if self.sliding_window > 0:
+            if self.global_every > 0 and (i + 1) % self.global_every == 0:
+                return ("causal", 0)
+            return ("sliding", self.sliding_window)
+        return ("causal", 0)
+
+    def layer_is_moe(self, i: int) -> bool:
+        return self.num_experts > 0 and i % self.moe_every == self.moe_offset
+
+    def layer_is_attention(self, i: int) -> bool:
+        """hybrid archs: attention vs mamba mixer."""
+        if self.family != "hybrid":
+            return self.family != "ssm"
+        return self.attn_every > 0 and i % self.attn_every == self.attn_offset
+
+    def active_params(self) -> int:
+        """Approximate active (per-token) parameter count."""
+        return _param_count(self, active_only=True)
+
+    def total_params(self) -> int:
+        return _param_count(self, active_only=False)
+
+
+def _ffn_params(cfg: ModelConfig, d_ff: int) -> int:
+    mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    return mult * cfg.d_model * d_ff
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d = cfg.d_model
+    total = cfg.vocab_size * d  # embeddings
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d
+    for i in range(cfg.num_layers):
+        if cfg.layer_is_attention(i):
+            total += d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+        else:  # mamba mixer
+            d_in = cfg.ssm_expand * d
+            nheads = d_in // cfg.ssm_head_dim
+            total += d * (2 * d_in + 2 * cfg.ssm_state + nheads) + d_in * d
+        if cfg.family == "ssm":
+            continue  # mamba2 interleaves mixers only, no separate FFN
+        if cfg.layer_is_moe(i):
+            e = cfg.experts_per_token if active_only else cfg.num_experts
+            total += e * _ffn_params(cfg, cfg.d_ff) + d * cfg.num_experts
+            if cfg.moe_shared_ff:
+                total += _ffn_params(cfg, cfg.moe_shared_ff)
+        else:
+            total += _ffn_params(cfg, cfg.d_ff)
+    # encoder (whisper) roughly mirrors decoder self-attn + ffn
+    for _ in range(cfg.encoder_layers):
+        total += 4 * cfg.d_model * cfg.q_dim + _ffn_params(cfg, cfg.d_ff)
+    return total
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+ARCH_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+SMOKE_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig], smoke: Callable[[], ModelConfig]):
+    ARCH_REGISTRY[name] = full
+    SMOKE_REGISTRY[name] = smoke
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    reg = SMOKE_REGISTRY if smoke else ARCH_REGISTRY
+    if name not in reg:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(reg)}")
+    return reg[name]()

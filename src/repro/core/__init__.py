@@ -1,0 +1,22 @@
+"""MCBP core algorithms (paper's contribution as composable JAX modules).
+
+- :mod:`repro.core.bitslice` — bit-slice decomposition / SM format / packing
+- :mod:`repro.core.quantization` — W8A8 per-channel/per-tensor INT schemes
+- :mod:`repro.core.brcr` — BS-repetitiveness GEMM reduction (§3.1)
+- :mod:`repro.core.bstc` — two-state bit-plane weight coding (§3.2)
+- :mod:`repro.core.bgpp` — bit-grained progressive top-k prediction (§3.3)
+- :mod:`repro.core.topk` — value-level top-k baseline (§2.2)
+- :mod:`repro.core.attention` — mask families + sparse attention paths
+"""
+
+from repro.core import attention, bgpp, bitslice, brcr, bstc, quantization, topk
+
+__all__ = [
+    "attention",
+    "bgpp",
+    "bitslice",
+    "brcr",
+    "bstc",
+    "quantization",
+    "topk",
+]

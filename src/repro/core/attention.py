@@ -1,0 +1,256 @@
+"""Attention primitives shared by the model zoo.
+
+Supports the mask families the assigned architectures need:
+  * causal                        (all decoder LMs)
+  * sliding-window causal         (gemma3 local layers, mixtral SWA)
+  * chunked-local causal          (llama4-scout iRoPE local layers)
+  * bidirectional / cross         (whisper encoder + cross-attn, vlm prefix)
+plus the MCBP sparse path: attention restricted to a predicted key set
+(mask- or gather-based), used with BGPP/value-top-k predictors.
+
+All softmaxes run in float32 regardless of input dtype (paper keeps softmax
+in FP16; f32 is the TPU-native equivalent).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # avoids NaN from (-inf) - (-inf) in fully-masked rows
+
+
+def causal_mask(s_q: int, s_k: int, offset: int = 0) -> jax.Array:
+    """(s_q, s_k) bool; query i attends keys j <= i + offset."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    return kj <= qi
+
+
+def sliding_window_mask(s_q: int, s_k: int, window: int, offset: int = 0) -> jax.Array:
+    """Causal ∧ (i + offset − j < window)."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (qi - kj < window)
+
+
+def chunked_mask(s_q: int, s_k: int, chunk: int, offset: int = 0) -> jax.Array:
+    """Causal within aligned chunks (llama4 local attention)."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (qi // chunk == kj // chunk)
+
+
+def make_mask(kind: str, s_q: int, s_k: int, window: int = 0, offset: int = 0):
+    if kind == "causal" or (kind in ("sliding", "chunked") and window <= 0):
+        return causal_mask(s_q, s_k, offset)
+    if kind == "sliding":
+        return sliding_window_mask(s_q, s_k, window, offset)
+    if kind == "chunked":
+        return chunked_mask(s_q, s_k, window, offset)
+    if kind == "full":
+        return jnp.ones((s_q, s_k), bool)
+    raise ValueError(f"unknown mask kind {kind!r}")
+
+
+def prefix_causal_mask(s_q: int, s_k: int, prefix: int, offset: int = 0) -> jax.Array:
+    """VLM mask: full attention within the (image) prefix, causal after."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) | ((qi < prefix) & (kj < prefix))
+
+
+def attend(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hk, D)
+    v: jax.Array,  # (B, Sk, Hk, D)
+    mask: Optional[jax.Array] = None,  # broadcastable to (B, Hq, Sq, Sk)
+    scale: Optional[float] = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """GQA dot-product attention with f32 softmax. Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Hk = k.shape[2]
+    group = Hq // Hk
+    scale = (D**-0.5) if scale is None else scale
+
+    qg = q.reshape(B, Sq, Hk, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_softcap > 0.0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None, None]
+        elif mask.ndim == 3:  # (B, Sq, Sk)
+            mask = mask[:, None, None]
+        elif mask.ndim == 4:  # (B, Hq, Sq, Sk) -> (B, Hk, group, Sq, Sk)
+            mask = mask.reshape(B, Hk, group, Sq, -1)
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def blocked_attend(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hk, D)
+    v: jax.Array,  # (B, Sk, Hk, D)
+    *,
+    mask_kind: str = "causal",
+    window=0,  # int or traced scalar; 0 disables (also chunk size / prefix len)
+    q_offset: int = 0,
+    block_q: int = 1024,
+    block_k: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax (flash-equivalent) attention in pure JAX.
+
+    Never materializes the (Sq, Sk) logits: scans KV blocks with a running
+    (max, denom, acc) carry, vmapped over Q blocks.  FLOPs/bytes match the
+    Pallas kernel, so dry-run rooflines are faithful; real-TPU runs swap in
+    ``repro.kernels.flash_attention``.  ``window`` may be a traced scalar so
+    heterogeneous local/global layer stacks can share one compiled body.
+    """
+    B, Sq0, Hq, D = q.shape
+    _, Sk0, Hk, _ = k.shape
+    group = Hq // Hk
+    scale = (D**-0.5) if scale is None else scale
+    block_q = min(block_q, Sq0)
+    block_k = min(block_k, Sk0)
+    # pad to block multiples; padded keys are masked out, padded queries cut
+    pq = (-Sq0) % block_q
+    pk = (-Sk0) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq, Sk = Sq0 + pq, Sk0 + pk
+    nq, nk = Sq // block_q, Sk // block_k
+    w = jnp.asarray(window, jnp.int32)
+
+    # GQA: repeat K/V to the full query-head count UP FRONT.  Splitting Hq
+    # into (Hk, group) inside the einsums breaks the sharded head dim (e.g.
+    # 48 -> (8, 6) cannot carry a 16-way "model" sharding and GSPMD falls
+    # back to replication + per-block all-reduces — §Perf iteration B1).
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    # (B, Hq, 1, nq, block_q, D) — the '1' keeps the carry structure below
+    qg = q.reshape(B, nq, block_q, Hq, 1, D).transpose(0, 3, 4, 1, 2, 5)
+    qg = qg.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def mask_fn(qi, kj):
+        causal = kj <= qi
+        if mask_kind == "full":
+            return jnp.ones_like(causal)
+        if mask_kind == "causal":
+            return causal
+        if mask_kind == "sliding":
+            return causal & ((w <= 0) | (qi - kj < w))
+        if mask_kind == "chunked":
+            cw = jnp.maximum(w, 1)
+            return causal & ((w <= 0) | (qi // cw == kj // cw))
+        if mask_kind == "prefix_causal":
+            return causal | ((qi < w) & (kj < w))
+        raise ValueError(mask_kind)
+
+    def kv_step(carry, ik):
+        m_prev, l_prev, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kf, ik * block_k, block_k, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vf, ik * block_k, block_k, axis=1)
+        # s: (B, Hk, group, nq, block_q, block_k)
+        s = jnp.einsum("bhgnqd,bkhd->bhgnqk", qg, kb)
+        qi = (
+            q_offset
+            + (jnp.arange(nq)[:, None] * block_q + jnp.arange(block_q)[None, :])
+        )  # (nq, block_q)
+        kj = ik * block_k + jnp.arange(block_k)  # (block_k,)
+        msk = mask_fn(qi[..., None], kj[None, None, :])  # (nq, bq, bk)
+        msk = msk & (kj < Sk0)[None, None, :]  # padded keys never attend
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhgnqk,bkhd->bhgnqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, Hq, 1, nq, block_q, 1), NEG_INF, jnp.float32),
+        jnp.zeros((B, Hq, 1, nq, block_q, 1), jnp.float32),
+        jnp.zeros((B, Hq, 1, nq, block_q, D), jnp.float32),
+    )
+    step = jax.checkpoint(kv_step, prevent_cse=False)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, init, jnp.arange(nk))
+    out = acc / jnp.maximum(l_f, 1e-30)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(B, Sq, Hq, D)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+def decode_attend(
+    q: jax.Array,  # (B, Hq, D) single-step query
+    k_cache: jax.Array,  # (B, S, Hk, D)
+    v_cache: jax.Array,  # (B, S, Hk, D)
+    valid: jax.Array,  # (B, S) bool — filled cache slots (∧ predicted set)
+    scale: Optional[float] = None,
+    logit_softcap: float = 0.0,
+    head_mask: Optional[jax.Array] = None,  # (B, Hk, S) e.g. BGPP alive sets
+) -> jax.Array:
+    """One-token decode attention over a (possibly sparsified) KV cache."""
+    out = attend(
+        q[:, None],
+        k_cache,
+        v_cache,
+        mask=_decode_mask(valid, head_mask, q.shape[1]),
+        scale=scale,
+        logit_softcap=logit_softcap,
+    )
+    return out[:, 0]
+
+
+def _decode_mask(valid, head_mask, hq):
+    B, S = valid.shape
+    if head_mask is None:
+        return valid[:, None, None, :]
+    hk = head_mask.shape[1]
+    group = hq // hk
+    m = head_mask & valid[:, None, :]
+    m = jnp.repeat(m, group, axis=1)  # (B, Hq, S)
+    return m[:, :, None, :]  # (B, Hq, 1, S)
+
+
+def gather_attend(
+    q: jax.Array,  # (B, Hq, D)
+    k_cache: jax.Array,  # (B, S, Hk, D)
+    v_cache: jax.Array,  # (B, S, Hk, D)
+    idx: jax.Array,  # (B, Hk, kmax) predicted key indices
+    idx_valid: jax.Array,  # (B, Hk, kmax)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Formal-compute stage on a static-size gathered key set (paper Fig. 3).
+
+    This is the real-savings path: only ``kmax`` K/V rows are touched.
+    """
+    B, Hq, D = q.shape
+    Hk = k_cache.shape[2]
+    group = Hq // Hk
+    scale = (D**-0.5) if scale is None else scale
+
+    bidx = jnp.arange(B)[:, None, None]
+    # (B, Hk, kmax, D) gathered per kv head
+    kg = k_cache[bidx, idx, jnp.arange(Hk)[None, :, None]]
+    vg = v_cache[bidx, idx, jnp.arange(Hk)[None, :, None]]
+
+    qg = q.reshape(B, Hk, group, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg, kg.astype(jnp.float32)) * scale
+    logits = jnp.where(idx_valid[:, :, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, vg.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

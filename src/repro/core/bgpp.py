@@ -1,0 +1,205 @@
+"""BGPP — Bit-Grained Progressive Prediction (paper §3.3, Fig. 9).
+
+Predicts the top-k attention-sparsity set with *bit-serial, MSB-first* scoring
+of Keys and per-key early termination, so low-order Key bit-planes of
+already-rejected Keys are never fetched from HBM.
+
+Round r (r = 0 is the magnitude MSB):
+  1. fetch plane ``nbits-1-r`` of the still-alive Keys (+ sign plane once);
+  2. partial score  Â_r += 2^(nbits-1-r) · (q · signed_plane);
+  3. threshold      θ_r = max_alive(Â_r) − α_r · radius      (paper Eq. 1)
+     on the softmax-logit scale; keys with Â_r < θ_r are dropped and their
+     remaining planes are never fetched (the early termination);
+  4. clock-gate analogue (paper §4.5): if θ_r falls below the alive minimum
+     the clipping step is skipped for the round (nothing would be pruned) and
+     the filter proceeds to the next round.
+
+Accounting mirrors the paper's IO model: prediction traffic is the bytes of
+the fetched planes of alive keys only; the value-level baseline (§2.2, Fig. 3)
+fetches a 4-bit MSB estimate of *every* key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+
+DEFAULT_RADIUS = 3.0  # paper: "we empirically set the default radius to 3"
+DEFAULT_ALPHA = 0.55  # paper §6: alpha in [0.5, 0.6]
+DEFAULT_QUERY_BITS = 4  # paper precompute uses 4-bit MSB queries
+
+
+class BGPPStats(NamedTuple):
+    """Per-call traffic/ops accounting (summed over rounds)."""
+
+    alive_per_round: jax.Array  # (nbits,) int32 (entries past `rounds` are 0)
+    predict_bytes: jax.Array  # bytes fetched by the progressive filter
+    value_topk_bytes: jax.Array  # value-level 4-bit baseline bytes
+    full_bytes: jax.Array  # fetching every key at 8 bit
+    predict_ops: jax.Array  # adder-tree adds executed
+
+
+@dataclasses.dataclass(frozen=True)
+class BGPPConfig:
+    rounds: int = 4
+    # target alpha; per-round alphas anneal 1.0 -> alpha (early partial
+    # estimates are noisy, so early rounds prune conservatively — the
+    # paper's per-round α_r control, §3.3)
+    alpha: float = DEFAULT_ALPHA
+    alpha_schedule: Optional[Tuple[float, ...]] = None  # overrides annealing
+    radius: float = DEFAULT_RADIUS
+    query_bits: int = DEFAULT_QUERY_BITS
+    nbits: int = bitslice.WEIGHT_MAG_BITS
+    # keep at least this many keys regardless of the threshold (0 = pure Eq.1)
+    min_keys: int = 0
+
+    def alphas(self, rounds: int) -> Tuple[float, ...]:
+        if self.alpha_schedule is not None:
+            s = tuple(self.alpha_schedule)
+            return (s + (s[-1],) * rounds)[:rounds]
+        start = max(1.0, self.alpha)
+        if rounds == 1:
+            return (self.alpha,)
+        return tuple(
+            start + (self.alpha - start) * r / (rounds - 1) for r in range(rounds)
+        )
+
+
+def _truncate_query(q: jax.Array, nbits: int, query_bits: int) -> jax.Array:
+    """Keep the top ``query_bits`` magnitude bits of an int query (paper: 4b)."""
+    shift = max(nbits - query_bits, 0)
+    sign = jnp.sign(q)
+    mag = (jnp.abs(q) >> shift) << shift
+    return sign * mag
+
+
+def bgpp_predict(
+    q: jax.Array,
+    k_planes: jax.Array,
+    k_sign: jax.Array,
+    cfg: BGPPConfig = BGPPConfig(),
+    logit_scale: float | jax.Array = 1.0,
+    valid: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, BGPPStats]:
+    """Progressive bit-grained filter for one query against S keys.
+
+    q:        (D,) int32 quantized query (full sign).
+    k_planes: (nbits, S, D) uint8 magnitude planes of the quantized keys.
+    k_sign:   (S, D) uint8.
+    logit_scale: Δq·Δk/√d — converts integer partial scores to logit scale so
+        the radius threshold (Eq. 1) operates on softmax-relevant units.
+    valid:    optional (S,) bool mask of usable cache slots.
+
+    Returns (alive_mask (S,), est_scores (S,) float32 logits, stats).
+    """
+    nbits, S, D = k_planes.shape
+    rounds = min(cfg.rounds, nbits)
+    qt = _truncate_query(q.astype(jnp.int32), cfg.nbits, cfg.query_bits)
+    k_signed = jnp.where(k_sign.astype(bool), -1, 1).astype(jnp.int32)  # (S, D)
+    plane_bytes = D / 8.0  # bit-planar packed storage: D bits per key-plane
+    sign_bytes = S * D / 8.0  # sign plane fetched once for all keys
+
+    alive0 = jnp.ones((S,), bool) if valid is None else valid.astype(bool)
+    alphas = jnp.asarray(cfg.alphas(rounds), jnp.float32)
+
+    def round_body(r, carry):
+        alive, partial, bytes_acc, ops_acc, alive_hist = carry
+        p = nbits - 1 - r
+        plane = jnp.take(k_planes, p, axis=0).astype(jnp.int32) * k_signed
+        contrib = (plane @ qt) * (2**p)  # (S,)
+        partial = jnp.where(alive, partial + contrib, partial)
+        n_alive = jnp.sum(alive)
+        bytes_acc = bytes_acc + n_alive.astype(jnp.float32) * plane_bytes
+        ops_acc = ops_acc + n_alive * D
+        logits = partial.astype(jnp.float32) * logit_scale
+        masked = jnp.where(alive, logits, -jnp.inf)
+        theta = jnp.max(masked) - alphas[r] * cfg.radius
+        min_alive = jnp.min(jnp.where(alive, logits, jnp.inf))
+        gate = theta <= min_alive  # clock-gate: clipping skipped this round
+        new_alive = jnp.where(gate, alive, alive & (logits >= theta))
+        alive_hist = alive_hist.at[r].set(jnp.sum(new_alive))
+        return (new_alive, partial, bytes_acc, ops_acc, alive_hist)
+
+    carry = (
+        alive0,
+        jnp.zeros((S,), jnp.int32),
+        jnp.asarray(sign_bytes, jnp.float32),
+        jnp.asarray(S * D, jnp.int32),
+        jnp.zeros((nbits,), jnp.int32),
+    )
+    alive, partial, bytes_acc, ops_acc, alive_hist = jax.lax.fori_loop(
+        0, rounds, round_body, carry
+    )
+
+    est = partial.astype(jnp.float32) * logit_scale
+    if cfg.min_keys:
+        # never return fewer than min_keys candidates (accuracy floor)
+        masked = jnp.where(alive0, est, -jnp.inf)
+        kth = jnp.sort(masked)[-min(cfg.min_keys, S)]
+        alive = alive | (masked >= kth)
+    alive = alive & alive0
+
+    stats = BGPPStats(
+        alive_per_round=alive_hist,
+        predict_bytes=bytes_acc,
+        value_topk_bytes=jnp.asarray(S * D * 0.5, jnp.float32),  # 4-bit all keys
+        full_bytes=jnp.asarray(S * D * 1.0, jnp.float32),
+        predict_ops=ops_acc,
+    )
+    return alive, est, stats
+
+
+def bgpp_predict_batched(
+    q: jax.Array,  # (B, Hq, D) int32
+    k_planes: jax.Array,  # (nbits, B, S, Hk, D)
+    k_sign: jax.Array,  # (B, S, Hk, D)
+    cfg: BGPPConfig = BGPPConfig(),
+    logit_scale: float | jax.Array = 1.0,
+    valid: Optional[jax.Array] = None,  # (B, S)
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched decode-time predictor with GQA head sharing.
+
+    Returns (alive (B, Hk, S) bool, est_scores (B, Hq, S)).  Query heads in the
+    same KV group OR their alive sets (a key kept by any query head is kept —
+    the conservative union the paper's per-head predictor implies for GQA).
+    """
+    B, Hq, D = q.shape
+    nbits, _, S, Hk, _ = k_planes.shape
+    group = Hq // Hk
+    if valid is None:
+        valid = jnp.ones((B, S), bool)
+
+    def per_batch(qb, planes_b, sign_b, valid_b):
+        # planes_b: (nbits, S, Hk, D) -> per-head (nbits, S, D)
+        planes_h = jnp.transpose(planes_b, (2, 0, 1, 3))  # (Hk, nbits, S, D)
+        sign_h = jnp.transpose(sign_b, (1, 0, 2))  # (Hk, S, D)
+        qg = qb.reshape(Hk, group, D)
+
+        def per_kv_head(qg_h, pl, sg):
+            alive, est = jax.vmap(
+                lambda qq: bgpp_predict(qq, pl, sg, cfg, logit_scale, valid_b)[:2]
+            )(qg_h)
+            return jnp.any(alive, axis=0), est  # union over the GQA group
+
+        return jax.vmap(per_kv_head)(qg, planes_h, sign_h)
+
+    alive, est = jax.vmap(per_batch, in_axes=(0, 1, 0, 0))(q, k_planes, k_sign, valid)
+    return alive, est.reshape(B, Hq, S)
+
+
+def alive_to_topk_indices(
+    alive: jax.Array, est: jax.Array, k_max: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Static-shape gather set: top ``k_max`` of the alive keys by est score.
+
+    Returns (indices (..., k_max), validity mask).  Used by the serving engine
+    so the formal-compute gather has a static shape.
+    """
+    masked = jnp.where(alive, est, -jnp.inf)
+    vals, idx = jax.lax.top_k(masked, k_max)
+    return idx, jnp.isfinite(vals)

@@ -1,0 +1,177 @@
+"""Bit-slice (BS) decomposition utilities — the substrate of MCBP.
+
+Terminology follows the paper: an INT-quantized k-bit tensor decomposes into k
+1-bit *bit-slice* (plane) tensors.  Weights use **sign-magnitude (SM)** format
+(paper §3.2) so the high-order magnitude planes expose their natural sparsity;
+two's-complement planes of negative values would be dense (sign extension).
+
+Plane numbering: plane ``p`` holds bit ``p`` of the magnitude, so plane 0 is the
+LSB ("1st BS" in the paper) and plane ``nbits-1`` is the highest magnitude bit
+("7th BS"); the sign is carried separately ("8th BS").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# INT8 symmetric quantization range used throughout (paper clips to [-127,127]
+# so magnitudes fit 7 bits).
+WEIGHT_MAG_BITS = 7
+INT8_MAX = 127
+
+
+def to_sign_magnitude(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int8/int32 tensor -> (sign, magnitude); sign is 1 where w < 0."""
+    w = w.astype(jnp.int32)
+    sign = (w < 0).astype(jnp.uint8)
+    mag = jnp.abs(w).astype(jnp.uint8)
+    return sign, mag
+
+
+def from_sign_magnitude(sign: jax.Array, mag: jax.Array) -> jax.Array:
+    return jnp.where(sign.astype(bool), -mag.astype(jnp.int32), mag.astype(jnp.int32))
+
+
+def bitplanes(mag: jax.Array, nbits: int = WEIGHT_MAG_BITS) -> jax.Array:
+    """Magnitude tensor -> stacked 1-bit planes, shape (nbits, *mag.shape).
+
+    plane[p] = bit p of mag (LSB = plane 0).  dtype uint8 in {0,1}.
+    """
+    mag = mag.astype(jnp.uint8)
+    shifts = jnp.arange(nbits, dtype=jnp.uint8).reshape((nbits,) + (1,) * mag.ndim)
+    return (jnp.right_shift(mag[None], shifts) & jnp.uint8(1)).astype(jnp.uint8)
+
+
+def from_bitplanes(planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`bitplanes`: (nbits, ...) planes -> magnitude."""
+    nbits = planes.shape[0]
+    weights = (2 ** np.arange(nbits)).astype(np.int32)
+    weights = jnp.asarray(weights).reshape((nbits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def signed_plane_split(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Split an integer tensor into disjoint non-negative parts: w = pos - neg.
+
+    This is the TPU-friendly realization of the paper's sign-decision unit:
+    BRCR/BSTC operate on the two {0,1}-plane tensors independently and the
+    results are subtracted.  The dominant (merge-stage) add count is identical
+    to the ASIC's signed-slice scheme because the parts have disjoint support
+    (DESIGN.md §2).
+    """
+    w = w.astype(jnp.int32)
+    return jnp.maximum(w, 0), jnp.maximum(-w, 0)
+
+
+def bit_sparsity(planes: jax.Array) -> jax.Array:
+    """Fraction of zero bits per plane, shape (nbits,)."""
+    nbits = planes.shape[0]
+    flat = planes.reshape(nbits, -1)
+    return 1.0 - jnp.mean(flat.astype(jnp.float32), axis=1)
+
+
+def value_sparsity(w: jax.Array) -> jax.Array:
+    return jnp.mean((w == 0).astype(jnp.float32))
+
+
+def average_bit_sparsity(w_q: jax.Array, nbits: int = WEIGHT_MAG_BITS) -> jax.Array:
+    """Paper's bs~: mean bit sparsity across magnitude planes (SM format)."""
+    _, mag = to_sign_magnitude(w_q)
+    return jnp.mean(bit_sparsity(bitplanes(mag, nbits)))
+
+
+# ---------------------------------------------------------------------------
+# Bit packing along an axis (bit-planar storage for the KV cache / weights).
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(bits: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a {0,1} uint8 tensor 8:1 into uint8 along ``axis``.
+
+    The axis length must be a multiple of 8.  Bit i of an output byte is
+    element ``8*j + i`` of the input (little-endian within the byte).
+    """
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    if n % 8 != 0:
+        raise ValueError(f"pack_bits axis length {n} not a multiple of 8")
+    moved = jnp.moveaxis(bits, axis, -1).astype(jnp.uint8)
+    grouped = moved.reshape(moved.shape[:-1] + (n // 8, 8))
+    weights = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], dtype=jnp.uint8)
+    packed = jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(packed: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_bits` (uint8 -> 8x {0,1} uint8 along ``axis``)."""
+    axis = axis % packed.ndim
+    moved = jnp.moveaxis(packed, axis, -1)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (jnp.right_shift(moved[..., None], shifts) & jnp.uint8(1)).astype(jnp.uint8)
+    bits = bits.reshape(moved.shape[:-1] + (moved.shape[-1] * 8,))
+    return jnp.moveaxis(bits, -1, axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class BitPlanarTensor:
+    """A k-bit integer tensor stored as packed sign + magnitude bit planes.
+
+    This is the storage format MCBP uses for the KV cache so BGPP rounds can
+    fetch one plane at a time (MSB first).  ``mag_planes`` has shape
+    ``(nbits, *shape[:-1], shape[-1]//8)`` uint8; ``sign`` likewise packed.
+    """
+
+    mag_planes: jax.Array
+    sign: jax.Array
+    nbits: int
+
+    @property
+    def plane_nbytes(self) -> int:
+        return int(np.prod(self.mag_planes.shape[1:]))
+
+    @classmethod
+    def from_int(cls, w: jax.Array, nbits: int = WEIGHT_MAG_BITS) -> "BitPlanarTensor":
+        sign, mag = to_sign_magnitude(w)
+        planes = bitplanes(mag, nbits)
+        return cls(
+            mag_planes=pack_bits(planes, axis=-1),
+            sign=pack_bits(sign, axis=-1),
+            nbits=nbits,
+        )
+
+    def plane(self, p: int) -> jax.Array:
+        """Unpacked {0,1} plane p (LSB = 0)."""
+        return unpack_bits(self.mag_planes[p], axis=-1)
+
+    def to_int(self) -> jax.Array:
+        planes = unpack_bits(self.mag_planes, axis=-1)
+        mag = from_bitplanes(planes)
+        sign = unpack_bits(self.sign, axis=-1)
+        return from_sign_magnitude(sign, mag)
+
+
+def group_indices(planes: jax.Array, m: int) -> jax.Array:
+    """Read m-row bit-plane groups as integer column patterns.
+
+    planes: (..., M, H) {0,1} with M % m == 0.
+    returns (..., M//m, H) int32 in [0, 2**m): pattern of each column where
+    row j within the group contributes bit j.
+    """
+    *lead, M, H = planes.shape
+    if M % m != 0:
+        raise ValueError(f"rows {M} not divisible by group size {m}")
+    g = planes.reshape(*lead, M // m, m, H).astype(jnp.int32)
+    weights = (2 ** jnp.arange(m, dtype=jnp.int32)).reshape((m, 1))
+    return jnp.sum(g * weights, axis=-2)
+
+
+def enumeration_matrix(m: int, dtype=jnp.float32) -> jax.Array:
+    """Paper's E: (m, 2**m) with E[j, c] = bit j of c."""
+    c = np.arange(2**m, dtype=np.int64)
+    e = ((c[None, :] >> np.arange(m)[:, None]) & 1).astype(np.float32)
+    return jnp.asarray(e, dtype=dtype)

@@ -1,0 +1,197 @@
+"""BRCR — BS-Repetitiveness-enabled Computation Reduction (paper §3.1).
+
+Factorizes each m-row group of each weight bit-plane as ``W_g @ X = E @ (I @ X)``:
+
+* ``I @ X`` (*merging*): every column of the group matrix is an m-bit pattern;
+  columns sharing a pattern c have their activations accumulated into entry c
+  of the Merged Activation Vector (MAV) ``Z`` (length 2**m).  A segment-sum —
+  at most ``H × (1 - bs)`` adds; pattern-0 columns are free (zero bits).
+* ``E @ Z`` (*reconstruction*): the enumeration matrix E (m × 2**m,
+  ``E[j,c] = bit j of c``) rebuilds the m row results — at most
+  ``m × 2**(m-1)`` adds, amortized across the whole H dimension.
+
+Signs are handled by the disjoint split ``W = W⁺ − W⁻`` (see
+``bitslice.signed_plane_split``); the merge-stage add count matches the ASIC's
+signed-slice scheme exactly.
+
+On TPU the MAV accumulation is expressed as a one-hot contraction so the MXU
+plays the role of the paper's CAM + addition-merge units (DESIGN.md §2); the
+Pallas kernel ``repro.kernels.brcr_gemm`` implements the tiled HBM→VMEM
+version.  This module is the reference/composable implementation plus the
+analytical-and-measured cost model used by the paper-figure benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitslice
+
+DEFAULT_GROUP_SIZE = 4  # paper §5.2: m=4 balances CPR and CR
+DEFAULT_NBITS = bitslice.WEIGHT_MAG_BITS
+
+
+def merged_activation_vector(group_idx: jax.Array, x: jax.Array, m: int) -> jax.Array:
+    """The I @ X step: scatter-accumulate activations by column pattern.
+
+    group_idx: (G, H) int32 patterns in [0, 2**m);  x: (H, N).
+    returns Z: (G, 2**m, N) with Z[g, c] = sum over {h : idx[g,h]=c} of x[h].
+    """
+    onehot = jax.nn.one_hot(group_idx, 2**m, dtype=x.dtype)  # (G, H, 2**m)
+    return jnp.einsum("ghc,hn->gcn", onehot, x)
+
+
+def reconstruct(z: jax.Array, m: int) -> jax.Array:
+    """The E @ Z step: (G, 2**m, N) -> (G, m, N)."""
+    e = bitslice.enumeration_matrix(m, dtype=z.dtype)  # (m, 2**m)
+    return jnp.einsum("jc,gcn->gjn", e, z)
+
+
+def _plane_matmul(mag: jax.Array, x: jax.Array, m: int, nbits: int) -> jax.Array:
+    """Sum over bit planes of a non-negative magnitude matrix via BRCR."""
+    planes = bitslice.bitplanes(mag, nbits)  # (k, M, H)
+    M, H = mag.shape
+    idx = bitslice.group_indices(planes, m)  # (k, M//m, H)
+    k = nbits
+    idx2 = idx.reshape(k * (M // m), H)
+    z = merged_activation_vector(idx2, x, m)  # (k*G, 2**m, N)
+    y = reconstruct(z, m)  # (k*G, m, N)
+    y = y.reshape(k, M // m, m, x.shape[-1]).reshape(k, M, x.shape[-1])
+    weights = jnp.asarray(2 ** np.arange(k), dtype=y.dtype).reshape(k, 1, 1)
+    return jnp.sum(y * weights, axis=0)
+
+
+def brcr_matmul(
+    w_q: jax.Array,
+    x: jax.Array,
+    m: int = DEFAULT_GROUP_SIZE,
+    nbits: int = DEFAULT_NBITS,
+) -> jax.Array:
+    """Exact ``w_q @ x`` computed through the BRCR factorization.
+
+    w_q: (M, H) int8 (SM-representable, |w| < 2**nbits); x: (H, N) int or float.
+    Bit-for-bit equal to the dense product when x is integer-valued.
+    """
+    pos, neg = bitslice.signed_plane_split(w_q)
+    xf = x.astype(jnp.float32) if not jnp.issubdtype(x.dtype, jnp.floating) else x
+    y = _plane_matmul(pos.astype(jnp.uint8), xf, m, nbits) - _plane_matmul(
+        neg.astype(jnp.uint8), xf, m, nbits
+    )
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.round(y).astype(jnp.int32)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Cost model (paper §3.1 closed forms + measured counts from actual planes).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BRCRCost:
+    """Operation counts for one (M, H) x (H, N) GEMM, per the paper's metric
+    (additions; value-level INT8 MACs for the dense baseline)."""
+
+    adds_merge: int  # measured: nonzero columns across groups/planes (x N)
+    adds_reconstruct: int  # measured: E@Z adds over non-empty bins (x N)
+    adds_total: int
+    adds_bsc_baseline: int  # sparsity-aware bit-serial: k*H*m*(1-bs) per group
+    macs_dense: int  # dense value-level INT8
+    adds_value_sparse: int  # value-sparsity scheme: H*m*k*(1-vs)
+    bit_sparsity: float
+    value_sparsity: float
+    reduction_vs_bsc: float
+    reduction_vs_dense: float
+
+
+def brcr_cost(
+    w_q: jax.Array,
+    n_cols: int = 1,
+    m: int = DEFAULT_GROUP_SIZE,
+    nbits: int = DEFAULT_NBITS,
+) -> BRCRCost:
+    """Measured op counts of BRCR on an actual weight matrix.
+
+    Counting convention (paper Fig. 4/7): merging charges one ADD per nonzero
+    column pattern; reconstruction charges ``popcount(E row ∩ non-empty bins)``
+    adds per group row; everything scales linearly with the activation width N.
+    """
+    w = np.asarray(w_q).astype(np.int64)
+    M, H = w.shape
+    pos = np.maximum(w, 0).astype(np.uint8)
+    neg = np.maximum(-w, 0).astype(np.uint8)
+
+    adds_merge = 0
+    adds_recon = 0
+    nz_bits = 0
+    for part in (pos, neg):
+        for p in range(nbits):
+            plane = (part >> p) & 1  # (M, H)
+            nz_bits += int(plane.sum())
+            grp = plane.reshape(M // m, m, H)
+            patt = (grp * (1 << np.arange(m))[None, :, None]).sum(axis=1)  # (G,H)
+            nz_cols = patt != 0
+            adds_merge += int(nz_cols.sum())
+            # non-empty bins per group -> reconstruction adds
+            for g in range(M // m):
+                bins = np.bincount(patt[g][nz_cols[g]], minlength=2**m) > 0
+                e = ((np.arange(2**m)[None, :] >> np.arange(m)[:, None]) & 1).astype(
+                    bool
+                )
+                hits = (e & bins[None, :]).sum(axis=1)
+                adds_recon += int(np.maximum(hits - 1, 0).sum() + (hits > 0).sum())
+
+    total_bits = 2 * nbits * M * H  # pos+neg planes
+    bs = 1.0 - nz_bits / total_bits
+    # Paper-comparable sparsity figures are on SM planes (not the split):
+    mag_planes = np.stack([(np.abs(w) >> p) & 1 for p in range(nbits)])
+    bs_sm = 1.0 - mag_planes.mean()
+    vs = float((w == 0).mean())
+
+    adds_bsc = int(round(nbits * H * m * (1.0 - bs_sm))) * (M // m)
+    macs_dense = M * H
+    adds_value = int(round(M * H * (1.0 - vs)))
+    total = adds_merge + adds_recon
+    return BRCRCost(
+        adds_merge=adds_merge * n_cols,
+        adds_reconstruct=adds_recon * n_cols,
+        adds_total=total * n_cols,
+        adds_bsc_baseline=adds_bsc * n_cols,
+        macs_dense=macs_dense * n_cols,
+        adds_value_sparse=adds_value * n_cols,
+        bit_sparsity=float(bs_sm),
+        value_sparsity=vs,
+        reduction_vs_bsc=1.0 - total / max(adds_bsc, 1),
+        reduction_vs_dense=1.0 - total / max(macs_dense, 1),
+    )
+
+
+def brcr_cost_closed_form(
+    H: int, m: int, nbits: int, bit_sparsity: float
+) -> Dict[str, float]:
+    """Paper's closed form for an H×H GEMV: kH²/m·(1−bs) + kH·2^(m−1)."""
+    merge = nbits * H * H / m * (1.0 - bit_sparsity)
+    recon = nbits * H * (2 ** (m - 1))
+    return {
+        "adds_merge": merge,
+        "adds_reconstruct": recon,
+        "adds_total": merge + recon,
+        "adds_bsc_baseline": nbits * H * H * (1.0 - bit_sparsity),
+        "macs_dense": float(H * H),
+    }
+
+
+def optimal_group_size(
+    H: int, nbits: int, bit_sparsity: float, m_range=range(1, 9)
+) -> int:
+    """DSE over m (paper Fig. 18): argmin of the closed-form total adds."""
+    costs = {
+        m: brcr_cost_closed_form(H, m, nbits, bit_sparsity)["adds_total"]
+        for m in m_range
+    }
+    return min(costs, key=costs.get)

@@ -1,0 +1,238 @@
+"""BSTC — BS-Sparsity-enabled Two-state Coding (paper §3.2).
+
+Lossless compression of weight bit-planes in sign-magnitude format.  Each
+m-bit *column* of a bit-plane group (the same m used by BRCR, so decode feeds
+compute with no re-layout) is encoded as:
+
+    all-zero column  ->  1'b0
+    non-zero column  ->  {1'b1, m bits of the column pattern}
+
+Encoded size of one (m × H) group-plane = ``H + m·nnz_cols`` bits vs ``m·H``
+raw; CR > 1 whenever column sparsity is high enough (paper: bit sparsity
+≳ 65%, true of magnitude planes 3–7 of INT8 LLM weights).  Planes whose
+measured sparsity is below the threshold stay raw, as does the sign plane.
+
+TPU adaptation (DESIGN.md §2): the ASIC's serial SIPO decoder becomes a
+bitmap + prefix-sum + gather, which is fully vectorizable; offline encoding is
+host-side numpy (the paper also compresses offline).  ``repro.kernels.
+bstc_decode`` is the Pallas tile decompressor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitslice
+
+DEFAULT_SPARSITY_THRESHOLD = 0.65  # paper Fig. 8(b): CR>1 needs SR > ~65%
+
+
+# ---------------------------------------------------------------------------
+# Host-side (offline) encoding.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EncodedPlane:
+    """One bit-plane of an (M, H) magnitude tensor, grouped into M//m rows.
+
+    bitmap:   (M//m, H) uint8 {0,1} — the two-state indicators.
+    patterns: (M//m, cap) uint8 — non-zero column patterns, row-padded to the
+              max nnz across group rows (static shape for JAX decode).
+    nnz:      (M//m,) int32 — valid prefix length per group row.
+    """
+
+    bitmap: np.ndarray
+    patterns: np.ndarray
+    nnz: np.ndarray
+    m: int
+    encoded_bits: int  # exact stream length: sum(H + m*nnz_g)
+    raw_bits: int
+
+    @property
+    def storage_bits(self) -> int:
+        """Bits of the padded on-device representation (bitmap + patterns)."""
+        return self.bitmap.size + self.patterns.size * self.m
+
+
+def encode_plane(plane: np.ndarray, m: int) -> EncodedPlane:
+    """plane: (M, H) {0,1}.  Groups m rows; encodes columns two-state."""
+    M, H = plane.shape
+    if M % m:
+        raise ValueError(f"rows {M} not divisible by m={m}")
+    grp = plane.reshape(M // m, m, H).astype(np.uint8)
+    patt = (grp * (1 << np.arange(m, dtype=np.uint32))[None, :, None]).sum(
+        axis=1
+    )  # (G, H) patterns
+    bitmap = (patt != 0).astype(np.uint8)
+    nnz = bitmap.sum(axis=1).astype(np.int32)
+    cap = max(int(nnz.max()), 1)
+    patterns = np.zeros((M // m, cap), dtype=np.uint8)
+    for g in range(M // m):
+        vals = patt[g][bitmap[g] != 0]
+        patterns[g, : len(vals)] = vals
+    encoded_bits = int(bitmap.size + m * nnz.sum())
+    return EncodedPlane(
+        bitmap=bitmap,
+        patterns=patterns,
+        nnz=nnz,
+        m=m,
+        encoded_bits=encoded_bits,
+        raw_bits=M * H,
+    )
+
+
+def decode_plane(enc: EncodedPlane) -> jax.Array:
+    """JAX-traceable inverse of :func:`encode_plane` -> (M, H) uint8 planes.
+
+    prefix-sum addressing: position of column h's pattern in the packed
+    stream is ``cumsum(bitmap)[h] - 1``; zero columns gather slot 0 and are
+    masked out.  This is the vectorized form of the SIPO decoder.
+    """
+    bitmap = jnp.asarray(enc.bitmap)  # (G, H)
+    patterns = jnp.asarray(enc.patterns)  # (G, cap)
+    pos = jnp.cumsum(bitmap.astype(jnp.int32), axis=1) - 1
+    pos = jnp.clip(pos, 0, patterns.shape[1] - 1)
+    vals = jnp.take_along_axis(patterns, pos.astype(jnp.int32), axis=1)
+    patt = jnp.where(bitmap != 0, vals, 0).astype(jnp.int32)  # (G, H)
+    G, H = patt.shape
+    shifts = jnp.arange(enc.m, dtype=jnp.int32).reshape(1, enc.m, 1)
+    bits = (jnp.right_shift(patt[:, None, :], shifts) & 1).astype(jnp.uint8)
+    return bits.reshape(G * enc.m, H)
+
+
+# ---------------------------------------------------------------------------
+# Whole-weight container.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BSTCWeight:
+    """A per-channel-symmetric INT8 weight stored bit-slice-first.
+
+    Magnitude planes are individually either BSTC-encoded (sparse high-order
+    planes) or raw packed bits; the sign plane is always raw (paper Fig. 8:
+    planes 1–2 and sign stay uncompressed).
+    """
+
+    shape: Tuple[int, int]
+    m: int
+    nbits: int
+    scale: np.ndarray  # (M,) float32 per-channel scale
+    encoded: List[Optional[EncodedPlane]]  # per plane; None => raw
+    raw_planes: List[Optional[np.ndarray]]  # packed uint8 (M, H//8) when raw
+    sign: np.ndarray  # packed uint8 (M, H//8)
+    plane_sparsity: np.ndarray  # (nbits,) measured SM bit sparsity
+
+    @property
+    def raw_bits(self) -> int:
+        return 8 * self.shape[0] * self.shape[1]
+
+    @property
+    def encoded_bits(self) -> int:
+        bits = self.shape[0] * self.shape[1]  # sign plane
+        for p in range(self.nbits):
+            enc = self.encoded[p]
+            bits += enc.encoded_bits if enc is not None else self.shape[0] * self.shape[1]
+        return bits
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.raw_bits / self.encoded_bits
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Bytes of the actual on-device arrays (padded representation)."""
+        b = self.sign.size
+        for p in range(self.nbits):
+            enc = self.encoded[p]
+            if enc is None:
+                b += self.raw_planes[p].size
+            else:
+                b += enc.bitmap.size // 8 + enc.patterns.size  # bitmap packable 8:1
+        return b
+
+
+def encode_weight(
+    w_q: np.ndarray,
+    scale: np.ndarray,
+    m: int = 4,
+    nbits: int = bitslice.WEIGHT_MAG_BITS,
+    threshold: float = DEFAULT_SPARSITY_THRESHOLD,
+    force_planes: Optional[List[int]] = None,
+) -> BSTCWeight:
+    """Offline BSTC compression of an int8 (M, H) weight.
+
+    ``force_planes`` pins the compressed set (paper default: planes 2..6,
+    i.e. "bits 3–7"); otherwise a plane is compressed iff doing so actually
+    shrinks it (encoded_bits < raw_bits) *and* its bit sparsity clears
+    ``threshold`` — the paper's Fig. 8 rule, made robust to distributions
+    where 65% bit sparsity still yields too few all-zero columns.
+    """
+    w = np.asarray(w_q).astype(np.int32)
+    M, H = w.shape
+    sign = (w < 0).astype(np.uint8)
+    mag = np.abs(w).astype(np.uint8)
+    planes = np.stack([(mag >> p) & 1 for p in range(nbits)]).astype(np.uint8)
+    sparsity = 1.0 - planes.reshape(nbits, -1).mean(axis=1)
+
+    encoded: List[Optional[EncodedPlane]] = []
+    raw_planes: List[Optional[np.ndarray]] = []
+    for p in range(nbits):
+        if force_planes is not None:
+            enc = encode_plane(planes[p], m) if p in force_planes else None
+        elif sparsity[p] >= threshold:
+            enc = encode_plane(planes[p], m)
+            if enc.encoded_bits >= enc.raw_bits:  # would expand: keep raw
+                enc = None
+        else:
+            enc = None
+        encoded.append(enc)
+        raw_planes.append(None if enc is not None else _pack8(planes[p]))
+    return BSTCWeight(
+        shape=(M, H),
+        m=m,
+        nbits=nbits,
+        scale=np.asarray(scale, dtype=np.float32),
+        encoded=encoded,
+        raw_planes=raw_planes,
+        sign=_pack8(sign),
+        plane_sparsity=sparsity.astype(np.float32),
+    )
+
+
+def decode_weight(bw: BSTCWeight) -> jax.Array:
+    """JAX-traceable exact reconstruction -> int8 (M, H)."""
+    M, H = bw.shape
+    planes = []
+    for p in range(bw.nbits):
+        if bw.encoded[p] is not None:
+            planes.append(decode_plane(bw.encoded[p]))
+        else:
+            planes.append(bitslice.unpack_bits(jnp.asarray(bw.raw_planes[p]), axis=-1))
+    mag = bitslice.from_bitplanes(jnp.stack(planes))
+    sign = bitslice.unpack_bits(jnp.asarray(bw.sign), axis=-1)
+    return bitslice.from_sign_magnitude(sign, mag).astype(jnp.int8)
+
+
+def _pack8(bits: np.ndarray) -> np.ndarray:
+    """numpy 8:1 bit packing along the last axis (little-endian)."""
+    *lead, n = bits.shape
+    assert n % 8 == 0, n
+    b = bits.reshape(*lead, n // 8, 8).astype(np.uint32)
+    return (b * (1 << np.arange(8, dtype=np.uint32))).sum(axis=-1).astype(np.uint8)
+
+
+def compression_ratio_closed_form(m: int, col_sparsity: float) -> float:
+    """CR = mH / (H + m·nnz) with nnz = (1-sc)·H  (paper Fig. 8b curves)."""
+    return m / (1.0 + m * (1.0 - col_sparsity))
+
+
+def expected_column_sparsity(bit_sparsity: float, m: int) -> float:
+    """Under independent bits, P(column of m bits all zero) = bs**m."""
+    return bit_sparsity**m

@@ -1,0 +1,112 @@
+"""Integer quantization per the paper (§4.1, Fig. 11).
+
+Weights: per-channel *symmetric* INT8 (scale only, clipped to [-127, 127] so
+magnitudes fit 7 bits / SM format).  Activations: per-tensor *asymmetric*
+(scale + zero point).  Output: ``Y = Scale ⊙ (W_q X_q) + Bias`` where the
+zero-point correction folds into a per-output-channel bias computed from the
+weight row sums (pre-known from calibration, Fig. 11b).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+class QuantizedWeight(NamedTuple):
+    """Per-channel symmetric INT8 weight. ``q`` int8 (out, in); ``scale`` (out,)."""
+
+    q: jax.Array
+    scale: jax.Array
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale[:, None]
+
+
+class QuantizedActivation(NamedTuple):
+    """Per-tensor asymmetric INT8 activation: x_f ~= (q - zero_point) * scale."""
+
+    q: jax.Array
+    scale: jax.Array
+    zero_point: jax.Array
+
+    def dequantize(self) -> jax.Array:
+        return (self.q.astype(jnp.float32) - self.zero_point) * self.scale
+
+
+def quantize_weight(w: jax.Array, eps: float = 1e-8) -> QuantizedWeight:
+    """Per-channel (dim 0 = output channel) symmetric INT8 quantization."""
+    absmax = jnp.max(jnp.abs(w), axis=tuple(range(1, w.ndim)))
+    scale = jnp.maximum(absmax, eps) / INT8_MAX
+    q = jnp.clip(
+        jnp.round(w / scale.reshape((-1,) + (1,) * (w.ndim - 1))),
+        -INT8_MAX,
+        INT8_MAX,
+    ).astype(jnp.int8)
+    return QuantizedWeight(q=q, scale=scale)
+
+
+def quantize_activation(
+    x: jax.Array,
+    amin: Optional[jax.Array] = None,
+    amax: Optional[jax.Array] = None,
+    eps: float = 1e-8,
+) -> QuantizedActivation:
+    """Per-tensor asymmetric INT8.  (amin, amax) may come from calibration."""
+    amin = jnp.min(x) if amin is None else amin
+    amax = jnp.max(x) if amax is None else amax
+    amin = jnp.minimum(amin, 0.0)  # keep 0 exactly representable
+    amax = jnp.maximum(amax, 0.0)
+    scale = jnp.maximum(amax - amin, eps) / 255.0
+    zero_point = jnp.round(-amin / scale) - 128.0
+    q = jnp.clip(jnp.round(x / scale + zero_point), -128, 127).astype(jnp.int8)
+    return QuantizedActivation(q=q, scale=scale, zero_point=zero_point)
+
+
+def int_matmul(w_q: jax.Array, x_q: jax.Array) -> jax.Array:
+    """Exact INT32 GEMM of int8 operands: (M,K) @ (K,N) -> (M,N) int32."""
+    return jax.lax.dot_general(
+        w_q,
+        x_q,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantized_linear(
+    w: QuantizedWeight,
+    x: QuantizedActivation,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Fig. 11b: Y_f = w_scale ⊙ x_scale · (W_q @ (X_q - Z_x)) [+ bias].
+
+    The zero-point term W_q @ (Z_x · 1) = row_sum(W_q) · Z_x is a rank-1 bias.
+    x.q is (K, N); returns (M, N) float32.
+    """
+    acc = int_matmul(w.q, x.q).astype(jnp.float32)
+    row_sum = jnp.sum(w.q.astype(jnp.int32), axis=1).astype(jnp.float32)
+    acc = acc - row_sum[:, None] * x.zero_point
+    y = acc * (w.scale[:, None] * x.scale)
+    if bias is not None:
+        y = y + bias[:, None]
+    return y
+
+
+def fake_quantized_linear(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Quantize-dequantize reference (W8A8) for accuracy-fidelity benchmarks."""
+    wq = quantize_weight(w)
+    xq = quantize_activation(x)
+    return quantized_linear(wq, xq)
+
+
+def quantization_error(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(max_abs_err, rel_fro_err) of per-channel symmetric INT8 round-trip."""
+    wq = quantize_weight(w)
+    wd = wq.dequantize()
+    err = jnp.abs(wd - w)
+    rel = jnp.linalg.norm(wd - w) / jnp.maximum(jnp.linalg.norm(w), 1e-8)
+    return jnp.max(err), rel

@@ -1,0 +1,56 @@
+"""Value-level top-k attention-sparsity prediction — the paper's baseline
+(§2.2, Fig. 3): Pre-compute with 4-bit MSB keys, Top-k sort, Formal compute.
+
+Implemented for the Fig. 5(g)/Fig. 17 comparisons and as the accelerator-
+agnostic fallback path of the serving engine.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ValueTopKStats(NamedTuple):
+    predict_bytes: jax.Array
+    predict_ops: jax.Array
+
+
+def quantize_msb(x: jax.Array, bits: int = 4, nbits: int = 8) -> jax.Array:
+    """Keep the top ``bits`` of an int8-range tensor (drop low bits)."""
+    shift = nbits - 1 - bits  # int8: 7 magnitude bits
+    if shift <= 0:
+        return x.astype(jnp.int32)
+    x = x.astype(jnp.int32)
+    return jnp.sign(x) * ((jnp.abs(x) >> shift) << shift)
+
+
+def value_topk_predict(
+    q: jax.Array,  # (D,) int
+    k: jax.Array,  # (S, D) int8 keys
+    k_keep: int,
+    estimate_bits: int = 4,
+) -> Tuple[jax.Array, jax.Array, ValueTopKStats]:
+    """Estimate scores from ``estimate_bits``-MSB keys, select top-k indices.
+
+    Traffic model: the estimate fetches all S keys at ``estimate_bits`` wide.
+    Returns (indices (k_keep,), est scores (S,), stats).
+    """
+    S, D = k.shape
+    k_est = quantize_msb(k, estimate_bits)
+    est = (k_est @ q.astype(jnp.int32)).astype(jnp.float32)
+    _, idx = jax.lax.top_k(est, k_keep)
+    stats = ValueTopKStats(
+        predict_bytes=jnp.asarray(S * D * estimate_bits / 8.0, jnp.float32),
+        predict_ops=jnp.asarray(S * D, jnp.int32),
+    )
+    return idx, est, stats
+
+
+def topk_mask(est: jax.Array, k_keep: int) -> jax.Array:
+    """Boolean mask keeping the k largest entries along the last axis."""
+    k_keep = min(k_keep, est.shape[-1])
+    kth = jnp.sort(est, axis=-1)[..., -k_keep]
+    return est >= kth[..., None]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for MCBP's compute hot spots.
+
+Each kernel package ships three files:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (+ offline data preparation)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  brcr_gemm       — bit-plane group GEMM via the enumeration factorization
+                    (MAV as a one-hot MXU contraction; paper §3.1 / Fig. 14)
+  bstc_decode     — two-state-coded plane decompression (bitmap + prefix-sum
+                    + gather; paper §4.4), emits BRCR group patterns
+  bstc_matmul     — fused BSTC-decompress → dense int8 MXU matmul (the
+                    TPU-native decode-stage path; DESIGN.md §2)
+  bgpp_score      — masked bit-plane key scoring for one BGPP round
+                    (paper §4.5 adder trees)
+  flash_attention — tiled online-softmax attention (causal / sliding /
+                    chunked masks) for the 32k/500k shapes
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bgpp_score.ops import bgpp_score_round  # noqa: F401

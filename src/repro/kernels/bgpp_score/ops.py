@@ -1,0 +1,44 @@
+"""jit'd wrapper for one BGPP scoring round over a bit-planar key cache."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("tile_s", "interpret"))
+def bgpp_score_round(
+    q: jax.Array,  # (D,) int32 (already MSB-truncated per paper)
+    plane_packed: jax.Array,  # (S, D//8) uint8 — magnitude plane p
+    sign_packed: jax.Array,  # (S, D//8) uint8
+    alive: jax.Array,  # (S,) bool
+    *,
+    tile_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """(S,) int32 masked plane scores (without the 2^p weighting)."""
+    from repro.kernels.bgpp_score.kernel import bgpp_score_pallas
+
+    S = plane_packed.shape[0]
+    tile_s = min(tile_s, S)
+    pad = (-S) % tile_s
+    if pad:
+        plane_packed = jnp.pad(plane_packed, ((0, pad), (0, 0)))
+        sign_packed = jnp.pad(sign_packed, ((0, pad), (0, 0)))
+        alive = jnp.pad(alive, (0, pad))
+    tile_any = jnp.any(
+        alive.reshape(-1, tile_s), axis=1
+    ).astype(jnp.int32)
+    alive_i = alive.astype(jnp.int32)[:, None]
+    out = bgpp_score_pallas(
+        q.astype(jnp.int32)[None, :],
+        plane_packed,
+        sign_packed,
+        alive_i,
+        tile_any,
+        tile_s=tile_s,
+        interpret=interpret,
+    )
+    return out[:S, 0]

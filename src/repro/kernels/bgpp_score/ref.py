@@ -1,0 +1,17 @@
+"""Oracle for one BGPP scoring round."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bgpp_score_round_ref(
+    q: jnp.ndarray,  # (D,) int32
+    plane_bits: jnp.ndarray,  # (S, D) uint8 {0,1} — magnitude plane p
+    sign_bits: jnp.ndarray,  # (S, D) uint8
+    alive: jnp.ndarray,  # (S,) bool
+) -> jnp.ndarray:
+    """(S,) int32 = (plane ⊙ sign) · q for alive keys, 0 otherwise."""
+    signed = jnp.where(sign_bits.astype(bool), -1, 1) * plane_bits.astype(jnp.int32)
+    contrib = signed @ q.astype(jnp.int32)
+    return jnp.where(alive, contrib, 0).astype(jnp.int32)

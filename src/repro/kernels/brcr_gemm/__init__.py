@@ -1,0 +1,1 @@
+from repro.kernels.brcr_gemm.ops import brcr_gemm, prepare_brcr_operands  # noqa: F401

@@ -1,0 +1,123 @@
+"""Public jit'd wrapper for the BRCR GEMM kernel + offline operand prep."""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitslice
+from repro.kernels.brcr_gemm.kernel import brcr_gemm_pallas
+
+
+class BRCROperands(NamedTuple):
+    """Offline-prepared kernel operands for one int8 weight (M, H).
+
+    group_idx:     (P, M//m, H) uint8 — signed-plane column patterns
+                   (P = 2*nbits: positive planes LSB→MSB, then negative).
+    plane_weights: (P,) f32 = [+1, +2, ..., +2^(k-1), -1, ..., -2^(k-1)].
+    m, nbits, shape bookkeeping for the wrapper.
+    """
+
+    group_idx: jax.Array
+    plane_weights: jax.Array
+    m: int
+    nbits: int
+    M: int
+    H: int
+
+
+def prepare_brcr_operands(
+    w_q, m: int = 4, nbits: int = bitslice.WEIGHT_MAG_BITS
+) -> BRCROperands:
+    """Host/offline: int8 weight -> signed bit-plane group patterns."""
+    w = np.asarray(w_q).astype(np.int32)
+    M, H = w.shape
+    if M % m:
+        raise ValueError(f"M={M} not divisible by group size m={m}")
+    parts = (np.maximum(w, 0), np.maximum(-w, 0))
+    idx = np.empty((2 * nbits, M // m, H), np.uint8)
+    shift = np.arange(m, dtype=np.uint32)[None, :, None]
+    for s, part in enumerate(parts):
+        for p in range(nbits):
+            plane = ((part >> p) & 1).astype(np.uint32).reshape(M // m, m, H)
+            idx[s * nbits + p] = (plane << shift).sum(axis=1).astype(np.uint8)
+    pw = np.concatenate(
+        [2.0 ** np.arange(nbits), -(2.0 ** np.arange(nbits))]
+    ).astype(np.float32)
+    return BRCROperands(
+        group_idx=jnp.asarray(idx),
+        plane_weights=jnp.asarray(pw),
+        m=m,
+        nbits=nbits,
+        M=M,
+        H=H,
+    )
+
+
+def tile_nonzero_map(
+    group_idx: jax.Array, m: int, tile_m: int, tile_k: int
+) -> jax.Array:
+    """(P, M//TM, H//TK) int32: 1 where the tile has any non-zero pattern."""
+    P, G, H = group_idx.shape
+    tg = tile_m // m
+    t = group_idx.reshape(P, G // tg, tg, H // tile_k, tile_k)
+    return jnp.any(t != 0, axis=(2, 4)).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "tile_m", "tile_k", "tile_n", "interpret"),
+)
+def _brcr_gemm_jit(
+    group_idx, plane_weights, x, *, m, tile_m, tile_k, tile_n, interpret
+):
+    tile_any = tile_nonzero_map(group_idx, m, tile_m, tile_k)
+    return brcr_gemm_pallas(
+        group_idx,
+        plane_weights,
+        tile_any,
+        x,
+        m=m,
+        tile_m=tile_m,
+        tile_k=tile_k,
+        tile_n=tile_n,
+        interpret=interpret,
+    )
+
+
+def brcr_gemm(
+    ops: BRCROperands,
+    x: jax.Array,
+    *,
+    tile_m: int = 128,
+    tile_k: int = 256,
+    tile_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compute ``w_q @ x`` from prepared BRCR operands.  x: (H, N) -> (M, N).
+
+    Pads N up to the tile size (M and H must already be tile-aligned — true
+    for every assigned architecture's projection dims).
+    """
+    H, N = x.shape
+    assert H == ops.H, (H, ops.H)
+    tile_m = min(tile_m, ops.M)
+    tile_k = min(tile_k, H)
+    n_pad = (-N) % tile_n
+    if n_pad:
+        x = jnp.pad(x, ((0, 0), (0, n_pad)))
+    y = _brcr_gemm_jit(
+        ops.group_idx,
+        ops.plane_weights,
+        x,
+        m=ops.m,
+        tile_m=tile_m,
+        tile_k=tile_k,
+        tile_n=min(tile_n, x.shape[1]),
+        interpret=interpret,
+    )
+    return y[:, :N]

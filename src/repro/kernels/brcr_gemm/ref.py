@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the BRCR GEMM kernel.
+
+Computes ``w_q @ x`` through exactly the factorization the kernel uses:
+per signed bit-plane, group indices -> one-hot MAV -> enumeration-matrix
+reconstruction -> shift-weighted accumulation.  Numerically identical to the
+dense product for integer-valued ``x`` (and to f32 matmul up to reassociation
+for float ``x``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import bitslice
+
+
+def brcr_gemm_ref(
+    group_idx: jnp.ndarray,  # (P, G, H) uint8 patterns per signed plane
+    plane_weights: jnp.ndarray,  # (P,) f32 = ±2^p
+    x: jnp.ndarray,  # (H, N)
+    m: int,
+) -> jnp.ndarray:
+    """Returns (G*m, N) f32."""
+    P, G, H = group_idx.shape
+    N = x.shape[1]
+    e = bitslice.enumeration_matrix(m, dtype=jnp.float32)  # (m, 2^m)
+    onehot = jnp.asarray(
+        group_idx[..., None] == jnp.arange(2**m, dtype=group_idx.dtype),
+        jnp.float32,
+    )  # (P, G, H, 2^m)
+    z = jnp.einsum("pghc,hn->pgcn", onehot, x.astype(jnp.float32))
+    y = jnp.einsum("jc,pgcn->pgjn", e, z)  # (P, G, m, N)
+    y = y * plane_weights[:, None, None, None]
+    return jnp.sum(y, axis=0).reshape(G * m, N)
+
+
+def dense_ref(w_q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """The ultimate oracle: plain dense product in f32."""
+    return w_q.astype(jnp.float32) @ x.astype(jnp.float32)

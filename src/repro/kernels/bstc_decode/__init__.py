@@ -1,0 +1,4 @@
+from repro.kernels.bstc_decode.ops import (  # noqa: F401
+    bstc_decode_patterns,
+    prepare_encoded_plane,
+)

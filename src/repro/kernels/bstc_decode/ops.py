@@ -1,0 +1,91 @@
+"""jit'd wrapper + operand prep for the BSTC decode kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bstc import EncodedPlane
+from repro.kernels.bstc_decode.kernel import bstc_decode_pallas
+
+
+class EncodedPlaneOperands(NamedTuple):
+    """Device-ready compressed plane: packed bitmap + padded patterns +
+    per-H-tile stream offsets (the segmented-layout start addresses)."""
+
+    bitmap: jax.Array  # (G, H//8) uint8
+    tile_offsets: jax.Array  # (G, H//tile_k) int32
+    patterns: jax.Array  # (G, cap) uint8
+    H: int
+    m: int
+
+    @property
+    def compressed_bytes(self) -> int:
+        return int(
+            self.bitmap.size + np.ceil(self.patterns.size * self.m / 8)
+        )
+
+
+def prepare_encoded_plane(enc: EncodedPlane, tile_k: int = 512) -> EncodedPlaneOperands:
+    """Host-side: EncodedPlane -> kernel operands with tile stream offsets."""
+    G, H = enc.bitmap.shape
+    assert H % tile_k == 0, (H, tile_k)
+    bitmap = _pack8(enc.bitmap)
+    csum = np.cumsum(enc.bitmap, axis=1)
+    # exclusive prefix count at each tile start
+    starts = np.arange(0, H, tile_k)
+    tile_offsets = np.concatenate(
+        [np.zeros((G, 1), np.int64), csum[:, starts[1:] - 1]], axis=1
+    ).astype(np.int32)
+    cap = max(int(enc.nnz.max()), 1)
+    cap = -(-cap // 8) * 8  # pad for clean byte math
+    patterns = np.zeros((G, cap), np.uint8)
+    patterns[:, : enc.patterns.shape[1]] = enc.patterns
+    return EncodedPlaneOperands(
+        bitmap=jnp.asarray(bitmap),
+        tile_offsets=jnp.asarray(tile_offsets),
+        patterns=jnp.asarray(patterns),
+        H=H,
+        m=enc.m,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_g", "tile_k", "interpret"))
+def _decode_jit(bitmap, tile_offsets, patterns, *, tile_g, tile_k, interpret):
+    return bstc_decode_pallas(
+        bitmap, tile_offsets, patterns,
+        tile_g=tile_g, tile_k=tile_k, interpret=interpret,
+    )
+
+
+def bstc_decode_patterns(
+    ops: EncodedPlaneOperands,
+    *,
+    tile_g: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decode to (G, H) uint8 group patterns (BRCR kernel input format).
+
+    The H-tile size is pinned by the prepared per-tile stream offsets.
+    """
+    G = ops.bitmap.shape[0]
+    tile_k = ops.H // ops.tile_offsets.shape[1]
+    return _decode_jit(
+        ops.bitmap,
+        ops.tile_offsets,
+        ops.patterns,
+        tile_g=min(tile_g, G),
+        tile_k=tile_k,
+        interpret=interpret,
+    )
+
+
+def _pack8(bits: np.ndarray) -> np.ndarray:
+    *lead, n = bits.shape
+    assert n % 8 == 0
+    b = bits.reshape(*lead, n // 8, 8).astype(np.uint32)
+    return (b * (1 << np.arange(8, dtype=np.uint32))).sum(axis=-1).astype(np.uint8)

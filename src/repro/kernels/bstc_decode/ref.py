@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for BSTC plane decoding (patterns, not expanded rows)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_patterns_ref(
+    bitmap_bits: jnp.ndarray,  # (G, H) uint8 {0,1}
+    patterns: jnp.ndarray,  # (G, cap) uint8
+) -> jnp.ndarray:
+    """Prefix-sum addressed gather -> (G, H) uint8 column patterns."""
+    pos = jnp.cumsum(bitmap_bits.astype(jnp.int32), axis=1) - 1
+    pos = jnp.clip(pos, 0, patterns.shape[1] - 1)
+    vals = jnp.take_along_axis(patterns, pos, axis=1)
+    return jnp.where(bitmap_bits != 0, vals, 0).astype(jnp.uint8)

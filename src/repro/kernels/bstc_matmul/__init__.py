@@ -1,0 +1,4 @@
+from repro.kernels.bstc_matmul.ops import (  # noqa: F401
+    bstc_matmul,
+    prepare_bstc_matmul_operands,
+)

@@ -1,0 +1,147 @@
+"""Wrapper + operand prep for the fused BSTC matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bstc
+from repro.kernels.bstc_matmul.kernel import bstc_matmul_pallas
+
+
+class BSTCMatmulOperands(NamedTuple):
+    """Per-plane compressed arrays (each encoded plane keeps its own pattern
+    capacity): ``enc`` is a flat tuple [bitmap_p, offsets_p, patterns_p]*."""
+
+    enc: Tuple[jax.Array, ...]
+    raw: Tuple[jax.Array, ...]  # (M, H//8) uint8 per raw plane
+    sign_bits: jax.Array  # (M, H//8) uint8
+    scale: Optional[jax.Array]  # (M,) f32 or None
+    enc_planes: Tuple[int, ...]
+    raw_planes: Tuple[int, ...]
+    m: int
+    M: int
+    H: int
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Traffic of the compressed representation (what HBM actually moves)."""
+        b = self.sign_bits.size + sum(r.size for r in self.raw)
+        for e in range(len(self.enc_planes)):
+            bitmap, _, patterns = self.enc[3 * e : 3 * e + 3]
+            b += bitmap.size + int(np.ceil(patterns.size * self.m / 8))
+        return int(b)
+
+    @property
+    def dense_bytes(self) -> int:
+        return self.M * self.H  # int8 weight
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.dense_bytes / self.hbm_bytes
+
+
+def prepare_bstc_matmul_operands(
+    w_q: np.ndarray,
+    scale: Optional[np.ndarray] = None,
+    m: int = 4,
+    nbits: int = 7,
+    tile_k: int = 512,
+    threshold: float = bstc.DEFAULT_SPARSITY_THRESHOLD,
+) -> BSTCMatmulOperands:
+    """Offline: int8 weight -> BSTC-compressed kernel operands."""
+    bw = bstc.encode_weight(
+        np.asarray(w_q), np.zeros(w_q.shape[0]) if scale is None else scale,
+        m=m, nbits=nbits, threshold=threshold,
+    )
+    M, H = bw.shape
+    assert H % tile_k == 0, (H, tile_k)
+    enc_planes = tuple(p for p in range(nbits) if bw.encoded[p] is not None)
+    raw_planes = tuple(p for p in range(nbits) if bw.encoded[p] is None)
+    G = M // m
+
+    enc: list[jax.Array] = []
+    for p in enc_planes:
+        e = bw.encoded[p]
+        csum = np.cumsum(e.bitmap, axis=1)
+        starts = np.arange(0, H, tile_k)
+        offsets = np.concatenate(
+            [np.zeros((G, 1), np.int64), csum[:, starts[1:] - 1]], axis=1
+        ).astype(np.int32)
+        cap = -(-max(int(e.nnz.max()), 1) // 8) * 8
+        patterns = np.zeros((G, cap), np.uint8)
+        patterns[:, : e.patterns.shape[1]] = e.patterns
+        enc += [
+            jnp.asarray(_pack8(e.bitmap)),
+            jnp.asarray(offsets),
+            jnp.asarray(patterns),
+        ]
+
+    raw = tuple(jnp.asarray(bw.raw_planes[p]) for p in raw_planes)
+    return BSTCMatmulOperands(
+        enc=tuple(enc),
+        raw=raw,
+        sign_bits=jnp.asarray(bw.sign),
+        scale=None if scale is None else jnp.asarray(scale, jnp.float32),
+        enc_planes=enc_planes,
+        raw_planes=raw_planes,
+        m=m,
+        M=M,
+        H=H,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "enc_planes", "raw_planes", "m", "M", "tile_m", "tile_n", "interpret",
+    ),
+)
+def _bstc_matmul_jit(
+    enc, raw, sign_bits, x, scale,
+    *, enc_planes, raw_planes, m, M, tile_m, tile_n, interpret,
+):
+    y = bstc_matmul_pallas(
+        enc, raw, sign_bits, x,
+        enc_planes=enc_planes, raw_planes=raw_planes, m=m, M=M,
+        tile_m=tile_m, tile_n=tile_n, interpret=interpret,
+    )
+    if scale is not None:
+        y = y * scale[:, None]
+    return y
+
+
+def bstc_matmul(
+    ops: BSTCMatmulOperands,
+    x: jax.Array,
+    *,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    apply_scale: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """``w_q @ x`` (optionally × per-channel scale) from compressed weights."""
+    H, N = x.shape
+    assert H == ops.H
+    n_pad = (-N) % tile_n
+    if n_pad:
+        x = jnp.pad(x, ((0, 0), (0, n_pad)))
+    y = _bstc_matmul_jit(
+        ops.enc, ops.raw, ops.sign_bits, x,
+        ops.scale if apply_scale else None,
+        enc_planes=ops.enc_planes, raw_planes=ops.raw_planes, m=ops.m,
+        M=ops.M, tile_m=min(tile_m, ops.M), tile_n=min(tile_n, x.shape[1]),
+        interpret=interpret,
+    )
+    return y[:, :N]
+
+
+def _pack8(bits: np.ndarray) -> np.ndarray:
+    *lead, n = bits.shape
+    assert n % 8 == 0
+    b = bits.reshape(*lead, n // 8, 8).astype(np.uint32)
+    return (b * (1 << np.arange(8, dtype=np.uint32))).sum(axis=-1).astype(np.uint8)

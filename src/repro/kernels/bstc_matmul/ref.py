@@ -1,0 +1,13 @@
+"""Oracle for the fused BSTC-decompress -> dense matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bstc_matmul_ref(w_q: jnp.ndarray, x: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """Dense f32 product of the *losslessly reconstructed* weight."""
+    y = w_q.astype(jnp.float32) @ x.astype(jnp.float32)
+    if scale is not None:
+        y = y * scale[:, None]
+    return y

@@ -1,0 +1,48 @@
+"""Public flash-attention wrapper with the model-zoo (B, S, H, D) layout."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mask_kind", "window", "q_offset", "scale", "tile_q", "tile_k", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hk, D)
+    v: jax.Array,  # (B, Sk, Hk, D)
+    *,
+    mask_kind: str = "causal",
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    tile_q: int = 128,
+    tile_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    group = Hq // Hk
+    scale = (D**-0.5) if scale is None else scale
+    tile_q = min(tile_q, Sq)
+    tile_k = min(tile_k, Sk)
+
+    qf = jnp.transpose(q, (0, 2, 1, 3)).reshape(B * Hq, Sq, D)
+    kf = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * Hk, Sk, D)
+    vf = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * Hk, Sk, D)
+    out = flash_attention_pallas(
+        qf, kf, vf,
+        group=group, scale=scale, mask_kind=mask_kind, window=window,
+        q_offset=q_offset, tile_q=tile_q, tile_k=tile_k, interpret=interpret,
+    )
+    return jnp.transpose(out.reshape(B, Hq, Sq, D), (0, 2, 1, 3))

@@ -1,0 +1,22 @@
+"""Oracle for the flash-attention kernel: materialized-softmax attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import attention
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hk, D)
+    v: jnp.ndarray,  # (B, Sk, Hk, D)
+    mask_kind: str = "causal",
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    mask = attention.make_mask(mask_kind, q.shape[1], k.shape[1], window, q_offset)
+    return attention.attend(q, k, v, mask=mask, scale=scale)

@@ -1,0 +1,267 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and extract the roofline raw data.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this builds the *real* step function (train_step with optimizer
+state / prefill_step / serve_step with KV cache), ShapeDtypeStruct inputs
+(zero allocation — jamba's 398B params never materialize), NamedShardings
+from the logical-axis specs, then ``jit(...).lower(...).compile()`` for the
+16×16 pod (and 2×16×16 multi-pod, which proves the "pod" axis shards).
+``memory_analysis()`` / ``cost_analysis()`` / the partitioned HLO feed
+EXPERIMENTS.md §Dry-run and §Roofline via ``repro.analysis.roofline``.
+
+Results land in ``experiments/dryrun/<mesh>/<arch>__<shape>.json``.
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as rl
+from repro.configs import ARCH_REGISTRY, get_config, shapes as shp
+from repro.data.pipeline import make_batch_specs
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import model_zoo
+from repro.optim import AdamWConfig, adamw_init, opt_state_specs
+from repro.serving import engine, kv_cache as kvc
+from repro.training.train_step import make_prefill_step, make_train_step
+
+Tree = Any
+
+# archs whose weights exceed 16 GB/chip under 16-way TP alone: FSDP the
+# d_model dim over "data" too (ZeRO-3-style per-layer all-gather)
+FSDP_ARCHS = {"jamba-1.5-large-398b", "mixtral-8x22b", "llama4-scout-17b-a16e"}
+
+# optimizer: int8 moments for the monster archs (DESIGN.md §4)
+INT8_OPT_ARCHS = FSDP_ARCHS
+
+
+def rules_for(arch: str, shape: shp.ShapeConfig, mesh) -> sh.ShardingRules:
+    fsdp = (sh.D_MODEL,) if arch in FSDP_ARCHS else ()
+    seq_shard = shape.name == "long_500k"
+    # sequence parallelism: train/prefill shard activation seq over
+    # "model"; decode shards the KV-cache seq over "model" whenever the
+    # kv-head count can't use it (flash-decode / distattention)
+    sp = True
+    return sh.rules_for_mesh(mesh, fsdp_axes=fsdp, seq_shard=seq_shard, sp=sp)
+
+
+# microbatch counts for the giant archs' train cells (activation peak / N)
+GRAD_ACCUM = {"jamba-1.5-large-398b": 8, "mixtral-8x22b": 8,
+              "llama4-scout-17b-a16e": 4}
+
+
+def fwd_kwargs_for(cfg, shape: shp.ShapeConfig) -> Dict:
+    if cfg.family == "ssm":
+        return dict(chunk=256, remat=shape.kind == "train")
+    kw = dict(block_q=512, block_k=1024, remat=shape.kind == "train")
+    if cfg.family == "hybrid":
+        kw["ssd_chunk"] = 256
+    return kw
+
+
+def _struct(tree: Tree) -> Tree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def build_cell(arch: str, shape: shp.ShapeConfig, mesh, rules, kv_format: str = "int8"):
+    """Returns (fn, arg_structs, in_shardings) for the cell."""
+    cfg = get_config(arch)
+    opt_cfg = AdamWConfig(
+        state_dtype="int8" if arch in INT8_OPT_ARCHS else "fp32"
+    )
+    param_structs = jax.eval_shape(
+        functools.partial(model_zoo.init_params, cfg=cfg), jax.random.key(0)
+    )
+    p_specs = model_zoo.param_specs(cfg)
+    p_shard = rules.tree_shardings(mesh, p_specs, param_structs)
+
+    batch_structs = make_batch_specs(cfg, shape)
+    b_shard = {
+        k: jax.sharding.NamedSharding(
+            mesh,
+            rules.spec_for_shape(
+                mesh, (sh.BATCH,) + (None,) * (len(v.shape) - 1), v.shape
+            ),
+        )
+        for k, v in batch_structs.items()
+    }
+
+    if shape.kind == "train":
+        opt_structs = jax.eval_shape(
+            functools.partial(adamw_init, cfg=opt_cfg), param_structs
+        )
+        o_specs = opt_state_specs(p_specs, opt_cfg)
+        state_structs = {"params": param_structs, "opt": opt_structs}
+        state_shard = {
+            "params": p_shard,
+            "opt": rules.tree_shardings(mesh, o_specs, opt_structs),
+        }
+        fn = make_train_step(
+            cfg, rules, opt_cfg, fwd_kwargs_for(cfg, shape),
+            grad_accum=GRAD_ACCUM.get(arch, 1), param_specs=p_specs,
+        )
+        return fn, (state_structs, batch_structs), (state_shard, b_shard)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, rules, fwd_kwargs_for(cfg, shape))
+        return fn, (param_structs, batch_structs), (p_shard, b_shard)
+
+    # decode: serve_step(params, cache, tokens)
+    # baseline cells: the paper's INT8 (Atom-style) KV cache; the bgpp
+    # format is the §Perf MCBP variant (--kv-format bgpp)
+    layout = kvc.layout_for(
+        cfg, shape.global_batch, shape.seq_len, kv_format=kv_format
+    )
+    cache_structs = jax.eval_shape(
+        functools.partial(kvc.init_cache_arrays, cfg, layout)
+    )
+    c_shard = rules.tree_shardings(mesh, kvc.cache_specs(cfg, layout), cache_structs)
+    tok_structs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_shard = jax.sharding.NamedSharding(
+        mesh, rules.spec_for_shape(mesh, (sh.BATCH, None), tok_structs.shape)
+    )
+    fn = engine.make_serve_step(cfg, layout, rules)
+    return fn, (param_structs, cache_structs, tok_structs), (p_shard, c_shard, t_shard)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    out_dir: str = "experiments/dryrun",
+    verbose: bool = True,
+    kv_format: str = "int8",
+) -> Optional[Dict]:
+    shape = shp.get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    skip = shp.applicable(arch, shape)
+    variant = "" if kv_format == "int8" else f"__{kv_format}"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kv_format": kv_format,
+    }
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        _write(out_dir, mesh_name, arch, shape_name + variant, result)
+        if verbose:
+            print(f"[dryrun] {arch:26s} {shape_name:12s} {mesh_name}: SKIP ({skip})")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(arch, shape, mesh)
+    cfg = get_config(arch)
+    t0 = time.time()
+    fn, structs, shardings = build_cell(arch, shape, mesh, rules, kv_format)
+    # donate the mutable aggregate (train state / KV cache) so outputs alias
+    donate = (0,) if shape.kind == "train" else (1,) if shape.kind == "decode" else ()
+    with mesh:
+        lowered = jax.jit(
+            fn, in_shardings=shardings, donate_argnums=donate
+        ).lower(*structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    report = rl.roofline_from_compiled(
+        compiled, arch, shape, mesh_name, chips=mesh.size, cfg=cfg
+    )
+    mem = compiled.memory_analysis()
+    result.update(report.to_dict())
+    result.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory_analysis=_mem_dict(mem),
+    )
+    _write(out_dir, mesh_name, arch, shape_name + variant, result)
+    if verbose:
+        hbm_gb = (result.get("memory_analysis") or {}).get("per_device_gb")
+        print(
+            f"[dryrun] {arch:26s} {shape_name:12s} {mesh_name}: OK "
+            f"flops/dev={report.device_flops:.3e} bytes/dev={report.device_bytes:.3e} "
+            f"coll={report.collective_bytes:.3e} bound={report.bottleneck} "
+            f"frac={report.roofline_fraction:.3f} hbm={hbm_gb}GB "
+            f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)"
+        )
+    return result
+
+
+def _mem_dict(mem) -> Optional[Dict]:
+    if mem is None:
+        return None
+    try:
+        args = float(mem.argument_size_in_bytes)
+        out = float(mem.output_size_in_bytes)
+        tmp = float(mem.temp_size_in_bytes)
+        alias = float(mem.alias_size_in_bytes)
+        total = args + out + tmp - alias
+        return {
+            "argument_bytes": args,
+            "output_bytes": out,
+            "temp_bytes": tmp,
+            "alias_bytes": alias,
+            "per_device_gb": round(total / 1e9, 3),
+            "fits_16gb": total < 16e9,
+        }
+    except Exception:  # pragma: no cover
+        return {"repr": str(mem)}
+
+
+def _write(out_dir, mesh_name, arch, shape_name, result):
+    d = os.path.join(out_dir, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{arch}__{shape_name}.json"), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCH_REGISTRY), default=None)
+    ap.add_argument("--shape", choices=[s.name for s in shp.SHAPES], default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--kv-format", default="int8", choices=["bf16", "int8", "bgpp"])
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        cells = [(a, s.name) for a in sorted(ARCH_REGISTRY) for s in shp.SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        try:
+            run_cell(arch, shape_name, args.multi_pod, args.out_dir,
+                     kv_format=args.kv_format)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape_name, repr(e)))
+            print(f"[dryrun] {arch:26s} {shape_name:12s}: FAIL {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print(f"[dryrun] all {len(cells)} cells passed on "
+          f"{'2x16x16' if args.multi_pod else '16x16'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Jamba-style hybrid LM: Mamba+attention 1:7 interleave with alternating
+MoE/MLP FFNs (jamba-1.5-large: attention at i%8==4, MoE at odd i).
+
+The layer pattern repeats with period ``attn_every`` (8), so the model scans
+over *super-blocks*: params are stacked (num_layers/period, ...) per
+in-block position, the block body is python-unrolled (heterogeneous kinds),
+and the scan amortizes compile cost across the 9 blocks.  Attention layers
+use no RoPE (position comes from the mamba mixers, as in Jamba).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention
+from repro.distributed import sharding as sh
+from repro.models import layers, mamba2, moe
+
+Params = Dict[str, Any]
+
+
+def _period(cfg) -> int:
+    assert cfg.attn_every > 0 and cfg.num_layers % cfg.attn_every == 0
+    assert cfg.attn_every % cfg.moe_every == 0
+    return cfg.attn_every
+
+
+def _pos_kinds(cfg, j: int) -> Tuple[bool, bool]:
+    """(is_attention, is_moe) for in-block position j."""
+    return (
+        j % cfg.attn_every == cfg.attn_offset,
+        cfg.num_experts > 0 and j % cfg.moe_every == cfg.moe_offset,
+    )
+
+
+def _pos_specs(cfg, j: int) -> Params:
+    is_attn, is_moe = _pos_kinds(cfg, j)
+    s: Params = {"norm1": layers.norm_specs(cfg.norm)}
+    if is_attn:
+        s["attn"] = layers.attention_specs()
+    else:
+        s["mamba"] = mamba2.mixer_specs()
+    s["norm2"] = layers.norm_specs(cfg.norm)
+    if is_moe:
+        s["moe"] = moe.moe_specs(cfg)
+    else:
+        s["mlp"] = layers.mlp_specs(cfg.activation)
+    return s
+
+
+def param_specs(cfg) -> Params:
+    period = _period(cfg)
+    specs: Params = {"embed": (sh.VOCAB, sh.D_MODEL)}
+    specs["blocks"] = {
+        f"pos{j}": jax.tree.map(
+            lambda axes: (sh.LAYERS,) + tuple(axes), _pos_specs(cfg, j),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        for j in range(period)
+    }
+    specs["final_norm"] = layers.norm_specs(cfg.norm)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (sh.D_MODEL, sh.VOCAB)
+    return specs
+
+
+def _pos_init(key, cfg, dtype, j: int):
+    is_attn, is_moe = _pos_kinds(cfg, j)
+    ks = jax.random.split(key, 2)
+    p: Params = {}
+    p["norm1"], _ = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if is_attn:
+        p["attn"], _ = layers.attention_init(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, dtype
+        )
+    else:
+        p["mamba"], _ = mamba2.mixer_init(ks[0], cfg, dtype)
+    p["norm2"], _ = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if is_moe:
+        p["moe"], _ = moe.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"], _ = layers.mlp_init(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype
+        )
+    return p, _pos_specs(cfg, j)
+
+
+def init(key, cfg) -> Tuple[Params, Params]:
+    dtype = layers._dtype(cfg.dtype)
+    period = _period(cfg)
+    n_blocks = cfg.num_layers // period
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    params: Params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)
+    }
+    pos_keys = jax.random.split(k_blocks, period)
+    params["blocks"] = {
+        f"pos{j}": jax.vmap(lambda k, jj=j: _pos_init(k, cfg, dtype, jj)[0])(
+            jax.random.split(pos_keys[j], n_blocks)
+        )
+        for j in range(period)
+    }
+    params["final_norm"], _ = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return params, param_specs(cfg)
+
+
+def _attn_layer(p, cfg, x, rules, block_q, block_k):
+    h = layers.apply_norm(x, p["norm1"], cfg.norm)
+    q, k, v = layers.qkv_project(
+        p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        positions=None, rope_theta=cfg.rope_theta,
+    )
+    q = sh.constrain(q, rules, (sh.BATCH, None, sh.HEADS, None))
+    out = attention.blocked_attend(
+        q, k, v, mask_kind="causal", block_q=block_q, block_k=block_k
+    )
+    B, S, _, _ = out.shape
+    return out.reshape(B, S, -1) @ p["attn"]["wo"]
+
+
+def _ffn_layer(p, cfg, x, rules=None):
+    h = layers.apply_norm(x, p["norm2"], cfg.norm)
+    if "moe" in p:
+        return moe.moe_apply(p["moe"], h, cfg, rules=rules)
+    return layers.mlp_apply(p["mlp"], h, cfg.activation), 0.0
+
+
+def forward(
+    params, cfg, tokens, rules=sh.ShardingRules(),
+    block_q: int = 512, block_k: int = 1024, ssd_chunk: int = 256,
+    remat: bool = False,
+):
+    dtype = layers._dtype(cfg.dtype)
+    period = _period(cfg)
+    x = params["embed"][tokens].astype(dtype)
+    x = sh.constrain(x, rules, (sh.BATCH, sh.SEQ, None))
+
+    def body(carry, block):
+        x, aux = carry
+        for j in range(period):
+            p = block[f"pos{j}"]
+            is_attn, _ = _pos_kinds(cfg, j)
+            if is_attn:
+                x = x + _attn_layer(p, cfg, x, rules, block_q, block_k)
+            else:
+                h = layers.apply_norm(x, p["norm1"], cfg.norm)
+                x = x + mamba2.mixer_apply(p["mamba"], cfg, h, chunk=ssd_chunk)
+            f, aux_l = _ffn_layer(p, cfg, x, rules)
+            x = x + f
+            aux = aux + aux_l
+            x = sh.constrain(x, rules, (sh.BATCH, sh.SEQ, None))
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+    )
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params.get("lm_head")
+    logits = x @ (head if head is not None else params["embed"].T.astype(dtype))
+    logits = sh.constrain(logits, rules, (sh.BATCH, sh.SEQ, sh.VOCAB))
+    return logits, aux

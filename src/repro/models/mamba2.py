@@ -1,0 +1,292 @@
+"""Mamba2 (SSD — state-space duality) block and attention-free LM.
+
+SSD forward (train/prefill) uses the chunked dual form: within a chunk the
+output is a masked (decay-weighted) attention-like contraction; across chunks
+a recurrent state (B, nheads, head_dim, state) is carried by a scan — O(S)
+work, O(1) state, which is what makes the mamba2/jamba ``long_500k`` cells
+runnable (DESIGN.md §4).
+
+Decode is the pure recurrence: h = a·h + dt·x·Bᵀ ; y = C·h + D·x, plus a
+rolling conv window.  BGPP is inapplicable (no KV cache); BRCR/BSTC apply to
+in/out projections (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def mixer_specs():
+    return {
+        "in_proj": (sh.D_MODEL, sh.FF),
+        "conv_w": (sh.CONV, sh.FF),
+        "conv_b": (sh.FF,),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": (sh.FF,)},
+        "out_proj": (sh.FF, sh.D_MODEL),
+    }
+
+
+def mixer_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nheads = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    proj_out = 2 * d_in + 2 * N + nheads
+    params = {
+        "in_proj": layers.dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, d_in + 2 * N), dtype)
+        * jnp.asarray(1.0 / math.sqrt(cfg.ssm_conv), dtype),
+        "conv_b": jnp.zeros((d_in + 2 * N,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_in,), dtype)},
+        "out_proj": layers.dense_init(ks[2], d_in, d, dtype),
+    }
+    return params, mixer_specs()
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    nheads = d_in // cfg.ssm_head_dim
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N :]
+    return z, xBC, dt, d_in, N, nheads
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along S.  xBC: (B, S, C)."""
+    K = conv_w.shape[0]
+    if conv_state is not None:  # decode: (B, K-1, C) rolling window
+        window = jnp.concatenate([conv_state, xBC], axis=1)  # (B, K, C)
+        out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                         conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+        return jax.nn.silu(out)[:, None, :].astype(xBC.dtype), window[:, 1:]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    stacked = jnp.stack(
+        [pad[:, i : i + xBC.shape[1]] for i in range(K)], axis=2
+    )  # (B, S, K, C)
+    out = jnp.einsum("bskc,kc->bsc", stacked.astype(jnp.float32),
+                     conv_w.astype(jnp.float32)) + conv_b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xBC.dtype), None
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) softplus'd step
+    A: jax.Array,  # (H,) negative decay rate
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int = 256,
+    return_state: bool = False,
+):
+    """Chunked SSD scan.  Returns (B, S, H, P)[, final state (B, H, P, N)]."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    a = dtc * A[None, None, None, :]  # (B, nc, L, H) log-decay per step (<=0)
+    a_cum = jnp.cumsum(a, axis=2)  # within-chunk cumulative log decay
+
+    # intra-chunk (dual/attention form): y[t] += sum_{s<=t} C_t·B_s dt_s
+    #   * exp(a_cum[t] - a_cum[s]) * x[s]
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))  # (B,nc,L,L)
+    decay = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    li = jnp.arange(chunk)
+    causal = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    gamma = jnp.where(causal, jnp.exp(decay), 0.0)  # (B,nc,L,L,H)
+    y_intra = jnp.einsum(
+        "bclm,bclmh,bcmh,bcmhp->bclhp",
+        scores, gamma, dtc.astype(jnp.float32), xc.astype(jnp.float32),
+    )
+
+    # chunk-final states: sum_s exp(a_cum[L-1]-a_cum[s]) dt_s B_s x_s
+    seg = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,L,H)
+    states = jnp.einsum(
+        "bclh,bclh,bcln,bclhp->bchpn",
+        seg, dtc.astype(jnp.float32), Bc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B,nc,H) total decay of chunk
+
+    def carry_fn(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        carry_fn,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk contribution: y[t] += C_t · (exp(a_cum[t]) * h_in)
+    y_inter = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp",
+        Cc.astype(jnp.float32), jnp.exp(a_cum), h_in,
+    )
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    if return_state:
+        return y.astype(x.dtype), h_final
+    return y.astype(x.dtype)
+
+
+def mixer_apply(
+    p: Params,
+    cfg,
+    x: jax.Array,  # (B, S, D)
+    chunk: int = 256,
+    return_state: bool = False,
+):
+    """Train/prefill SSD mixer.  With return_state, also emits the decode
+    continuation state {"h", "conv"} (serving prefill)."""
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt, d_in, N, nheads = _split_proj(cfg, zxbcdt)
+    xBC_raw = xBC
+    xBC, _ = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xin = xBC[..., :d_in].reshape(B, S, nheads, cfg.ssm_head_dim)
+    Bm = xBC[..., d_in : d_in + N]
+    Cm = xBC[..., d_in + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    res = ssd_chunked(xin, dt, A, Bm, Cm, chunk=chunk, return_state=return_state)
+    y, h_final = res if return_state else (res, None)
+    y = y + xin * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, d_in)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"]["scale"])
+    out = y @ p["out_proj"]
+    if return_state:
+        K = p["conv_w"].shape[0]
+        conv_tail = xBC_raw[:, -(K - 1):, :]  # pre-activation window
+        return out, {"h": h_final, "conv": conv_tail}
+    return out
+
+
+def mixer_decode_step(
+    p: Params,
+    cfg,
+    x: jax.Array,  # (B, 1, D)
+    state: Dict[str, jax.Array],  # {"h": (B,H,P,N) f32, "conv": (B,K-1,C)}
+    rules: "sh.ShardingRules | None" = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt, d_in, N, nheads = _split_proj(cfg, zxbcdt)
+    xBC, conv_state = _causal_conv(
+        xBC, p["conv_w"], p["conv_b"], conv_state=state["conv"]
+    )
+    xin = xBC[..., :d_in].reshape(B, nheads, cfg.ssm_head_dim)
+    Bm = xBC[:, 0, d_in : d_in + N]  # (B, N)
+    Cm = xBC[:, 0, d_in + N :]
+    dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt_s * A[None, :])  # (B,H)
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_s, xin.astype(jnp.float32), Bm.astype(jnp.float32)
+    )
+    if rules is not None:
+        # pin the state-update outer product: without it the partitioner
+        # drops the head (model) sharding and each of jamba's 63 mamba
+        # layers materializes an unsharded (B,H,P,N) f32 temp
+        h = sh.constrain(h, rules, (sh.BATCH, sh.FF, None, None))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xin.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"]["scale"])
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+def init_mixer_state(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * cfg.ssm_state), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Full attention-free LM (mamba2-1.3b)
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg) -> Params:
+    s_layer = {"norm": layers.norm_specs(cfg.norm), "mixer": mixer_specs()}
+    return {
+        "embed": (sh.VOCAB, sh.D_MODEL),
+        "layers": jax.tree.map(
+            lambda axes: (sh.LAYERS,) + tuple(axes), s_layer,
+            is_leaf=lambda x: isinstance(x, tuple),
+        ),
+        "final_norm": layers.norm_specs(cfg.norm),
+    }
+
+
+def init(key, cfg) -> Tuple[Params, Params]:
+    dtype = layers._dtype(cfg.dtype)
+    k_embed, k_layers = jax.random.split(key)
+    params: Params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)
+    }
+
+    def one(k):
+        p = {}
+        p["norm"], _ = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mixer"], _ = mixer_init(k, cfg, dtype)
+        return p
+
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    params["layers"] = jax.vmap(one)(keys)
+    params["final_norm"], _ = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    return params, param_specs(cfg)
+
+
+def forward(params, cfg, tokens, rules=sh.ShardingRules(), chunk=256, remat=False):
+    dtype = layers._dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    x = sh.constrain(x, rules, (sh.BATCH, sh.SEQ, None))
+
+    def body(x, p):
+        h = layers.apply_norm(x, p["norm"], cfg.norm)
+        x = x + mixer_apply(p["mixer"], cfg, h, chunk=chunk)
+        x = sh.constrain(x, rules, (sh.BATCH, sh.SEQ, None))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = x @ params["embed"].T.astype(dtype)
+    logits = sh.constrain(logits, rules, (sh.BATCH, sh.SEQ, sh.VOCAB))
+    return logits, jnp.zeros((), jnp.float32)

@@ -1,0 +1,78 @@
+"""Family dispatch for the 10 assigned architectures."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.distributed import sharding as sh
+from repro.models import hybrid, mamba2, transformer, whisper
+
+Params = Dict[str, Any]
+
+
+def init(key, cfg) -> Tuple[Params, Params]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init(key, cfg)
+    if cfg.family == "ssm":
+        return mamba2.init(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init(key, cfg)
+    if cfg.family == "enc_dec":
+        return whisper.init(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg) -> Params:
+    """Params only — safe to wrap in jax.eval_shape (dry-run path)."""
+    return init(key, cfg)[0]
+
+
+def param_specs(cfg) -> Params:
+    """Logical-axis specs, computed without allocating anything."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.param_specs(cfg)
+    if cfg.family == "ssm":
+        return mamba2.param_specs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.param_specs(cfg)
+    if cfg.family == "enc_dec":
+        return whisper.param_specs(cfg)
+    raise ValueError(cfg.family)
+
+
+def forward(
+    params: Params,
+    cfg,
+    batch: Dict[str, jax.Array],
+    rules: sh.ShardingRules = sh.ShardingRules(),
+    **kw,
+):
+    """batch: {"tokens": (B,S)} + {"frames": ...} (audio) or {"vision": ...}.
+
+    Returns (logits, aux_loss).
+    """
+    tokens = batch["tokens"]
+    if cfg.family in ("dense", "moe"):
+        return transformer.forward(params, cfg, tokens, rules, **kw)
+    if cfg.family == "vlm":
+        return transformer.forward(
+            params, cfg, tokens, rules, vision_embeds=batch["vision"], **kw
+        )
+    if cfg.family == "ssm":
+        return mamba2.forward(params, cfg, tokens, rules, **kw)
+    if cfg.family == "hybrid":
+        return hybrid.forward(params, cfg, tokens, rules, **kw)
+    if cfg.family == "enc_dec":
+        return whisper.forward(params, cfg, tokens, batch["frames"], rules, **kw)
+    raise ValueError(cfg.family)
+
+
+def extra_inputs(cfg) -> Tuple[str, ...]:
+    """Modality-stub inputs beyond tokens (the brief's input_specs contract)."""
+    if cfg.family == "vlm":
+        return ("vision",)
+    if cfg.family == "enc_dec":
+        return ("frames",)
+    return ()

@@ -1,0 +1,243 @@
+"""Decoder-only transformer (dense GQA / MoE) — gemma3-{1b,4b}, deepseek-7b,
+phi4-mini, mixtral-8x22b, llama4-scout, and the paligemma backbone.
+
+Heterogeneous local/global attention layers (gemma3 5:1, mixtral SWA, llama4
+chunked 3:1) share ONE scanned layer body: the mask kind is a static string
+per model while the per-layer window/chunk size and RoPE base are traced
+(L,)-arrays fed through the scan — window 0 means full causal.  This keeps
+the dry-run compile cost O(1) in depth.
+
+Training/prefill use the blocked flash-equivalent attention; decode uses the
+KV-cache paths in ``repro.serving``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention
+from repro.distributed import sharding as sh
+from repro.models import layers, moe
+
+Params = Dict[str, Any]
+
+
+def _mask_kind(cfg) -> str:
+    if cfg.family == "vlm":
+        return "prefix_causal"
+    if cfg.chunk_attention > 0:
+        return "chunked"
+    if cfg.sliding_window > 0:
+        return "sliding"
+    return "causal"
+
+
+def layer_windows(cfg) -> np.ndarray:
+    """(L,) per-layer window/chunk size (0 = full causal)."""
+    out = []
+    for i in range(cfg.num_layers):
+        kind, w = cfg.layer_attn_window(i)
+        out.append(w if kind in ("sliding", "chunked") else 0)
+    return np.asarray(out, np.int32)
+
+
+def layer_thetas(cfg) -> np.ndarray:
+    out = []
+    for i in range(cfg.num_layers):
+        kind, _ = cfg.layer_attn_window(i)
+        local = kind in ("sliding", "chunked") and cfg.rope_theta_local > 0
+        out.append(cfg.rope_theta_local if local else cfg.rope_theta)
+    return np.asarray(out, np.float32)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _layer_specs(cfg):
+    s: Params = {
+        "attn_norm": layers.norm_specs(cfg.norm),
+        "attn": layers.attention_specs(cfg.qk_norm),
+        "mlp_norm": layers.norm_specs(cfg.norm),
+    }
+    if cfg.num_experts > 0:
+        s["moe"] = moe.moe_specs(cfg)
+    else:
+        s["mlp"] = layers.mlp_specs(cfg.activation)
+    if cfg.post_norms:
+        s["post_attn_norm"] = layers.norm_specs(cfg.norm)
+        s["post_mlp_norm"] = layers.norm_specs(cfg.norm)
+    return s
+
+
+def param_specs(cfg) -> Params:
+    """Logical-axis specs without allocating any parameters (dry-run path)."""
+    specs: Params = {"embed": (sh.VOCAB, sh.D_MODEL)}
+    specs["layers"] = jax.tree.map(
+        lambda axes: (sh.LAYERS,) + tuple(axes), _layer_specs(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    specs["final_norm"] = layers.norm_specs(cfg.norm)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = (sh.D_MODEL, sh.VOCAB)
+    if cfg.family == "vlm":
+        specs["vision_proj"] = (None, sh.D_MODEL)
+    return specs
+
+
+def _layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    s: Params = {}
+    p["attn_norm"], s["attn_norm"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    p["attn"], s["attn"] = layers.attention_init(
+        ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        dtype, qk_norm=cfg.qk_norm, norm_kind=cfg.norm,
+    )
+    p["mlp_norm"], s["mlp_norm"] = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if cfg.num_experts > 0:
+        p["moe"], s["moe"] = moe.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"], s["mlp"] = layers.mlp_init(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype
+        )
+    if cfg.post_norms:
+        p["post_attn_norm"], s["post_attn_norm"] = layers.norm_init(
+            cfg.d_model, cfg.norm, dtype
+        )
+        p["post_mlp_norm"], s["post_mlp_norm"] = layers.norm_init(
+            cfg.d_model, cfg.norm, dtype
+        )
+    return p, s
+
+
+def init(key, cfg) -> Tuple[Params, Params]:
+    """Returns (params, logical-axis specs).  Layer params are stacked (L, ...)."""
+    if cfg.num_experts > 0:
+        assert cfg.moe_every == 1, "mixed MoE/dense stacks live in hybrid.py"
+    dtype = layers._dtype(cfg.dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+
+    params: Params = {"embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)}
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg, dtype)[0])(layer_keys)
+    params["final_norm"], _ = layers.norm_init(cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, dtype
+        )
+    if cfg.family == "vlm":
+        params["vision_proj"] = layers.dense_init(
+            k_head, cfg.d_vision, cfg.d_model, dtype
+        )
+    return params, param_specs(cfg)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _attention_block(
+    p, cfg, x, positions, theta, window, mask_kind, rules, block_q, block_k,
+    return_kv=False,
+):
+    h = layers.apply_norm(x, p["attn_norm"], cfg.norm)
+    q, k, v = layers.qkv_project(
+        p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        positions, theta, qk_norm=cfg.qk_norm,
+    )
+    q = sh.constrain(q, rules, (sh.BATCH, None, sh.HEADS, None))
+    k = sh.constrain(k, rules, (sh.BATCH, None, sh.KV_HEADS, None))
+    v = sh.constrain(v, rules, (sh.BATCH, None, sh.KV_HEADS, None))
+    attn = attention.blocked_attend(
+        q, k, v, mask_kind=mask_kind, window=window,
+        block_q=block_q, block_k=block_k,
+    )
+    B, S, _, _ = attn.shape
+    out = attn.reshape(B, S, -1) @ p["attn"]["wo"]
+    if cfg.post_norms:
+        out = layers.apply_norm(out, p["post_attn_norm"], cfg.norm)
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def _ffn_block(p, cfg, x, rules=None):
+    h = layers.apply_norm(x, p["mlp_norm"], cfg.norm)
+    if cfg.num_experts > 0:
+        out, aux = moe.moe_apply(p["moe"], h, cfg, rules=rules)
+    else:
+        out, aux = layers.mlp_apply(p["mlp"], h, cfg.activation), 0.0
+    if cfg.post_norms:
+        out = layers.apply_norm(out, p["post_mlp_norm"], cfg.norm)
+    return out, aux
+
+
+def forward(
+    params: Params,
+    cfg,
+    tokens: jax.Array,  # (B, S) int32
+    rules: sh.ShardingRules = sh.ShardingRules(),
+    vision_embeds: Optional[jax.Array] = None,  # (B, Tv, d_vision) VLM stub
+    block_q: int = 512,
+    block_k: int = 1024,
+    return_kv: bool = False,
+    remat: bool = False,
+):
+    """Returns (logits, aux_loss[, stacked (k, v)])."""
+    B, S_text = tokens.shape
+    dtype = layers._dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    prefix = 0
+    if cfg.family == "vlm":
+        assert vision_embeds is not None
+        vis = (vision_embeds.astype(dtype) @ params["vision_proj"]).astype(dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        prefix = vis.shape[1]
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = sh.constrain(x, rules, (sh.BATCH, sh.SEQ, None))
+
+    mask_kind = _mask_kind(cfg)
+    windows = jnp.asarray(layer_windows(cfg))
+    if mask_kind == "prefix_causal":
+        windows = jnp.full_like(windows, prefix)
+    thetas = jnp.asarray(layer_thetas(cfg))
+
+    def body(carry, scanned):
+        x, aux = carry
+        p, window, theta = scanned
+        a, kv = _attention_block(
+            p, cfg, x, positions, theta, window, mask_kind, rules,
+            block_q, block_k, return_kv=return_kv,
+        )
+        x = x + a
+        f, aux_l = _ffn_block(p, cfg, x, rules)
+        x = x + f
+        x = sh.constrain(x, rules, (sh.BATCH, sh.SEQ, None))
+        return (x, aux + aux_l), kv
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), kvs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], windows, thetas)
+    )
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(dtype)
+    else:
+        logits = x @ head
+    logits = sh.constrain(logits, rules, (sh.BATCH, sh.SEQ, sh.VOCAB))
+    if return_kv:
+        return logits, aux, kvs
+    return logits, aux

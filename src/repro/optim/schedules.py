@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step,
+    peak_lr: float,
+    warmup_steps: int = 1000,
+    decay_steps: int = 100_000,
+    end_lr_ratio: float = 0.1,
+):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps) / max(decay_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = end_lr_ratio + (1 - end_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

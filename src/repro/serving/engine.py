@@ -1,0 +1,536 @@
+"""Serving engine: prefill + single-token decode (``serve_step``) for every
+family, with int8 KV, ring-buffered local windows, and the MCBP BGPP sparse
+path.
+
+``make_serve_step(cfg, layout, rules)`` returns the pure function the
+dry-run lowers for the decode_32k / long_500k cells:
+
+    serve_step(params, cache, tokens (B,1)) -> (logits (B,1,V), cache')
+
+Decode loops over layers in python (tiny per-layer op count; heterogeneous
+caches), indexing the stacked parameter pytrees with static layer ids.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention, bgpp as bgpp_mod, bitslice
+from repro.distributed import sharding as sh
+from repro.models import layers, mamba2, moe, transformer
+from repro.serving import kv_cache as kvc
+
+Tree = Dict[str, Any]
+NEG_INF = attention.NEG_INF
+
+
+# --------------------------------------------------------------------------
+# attention decode over the cache stacks
+# --------------------------------------------------------------------------
+
+
+def _split_heads(x, B, H, Dh):
+    return x.reshape(B, H, Dh)
+
+
+def _decode_attend(
+    q,  # (B, Hq, Dh)
+    entry: Tree,  # cache stack slices for this layer — heads-major (B,Hk,S,D)
+    valid,  # (B, S) bool
+    cfg,
+    fmt: str,
+    head_mask=None,  # (B, Hk, S) BGPP alive sets
+):
+    """Decode attention over the heads-major cache.
+
+    Heads-major layout (A1) avoids cache transposes; the int8 format runs
+    the paper-faithful 8-bit QK^T (A2) and 8-bit PV (A3) as int8 MXU dots,
+    so the cache is consumed directly with no dequantized copies.
+    """
+    B, Hq, Dh = q.shape
+    Hk = cfg.num_kv_heads
+    g = Hq // Hk
+    scale = Dh**-0.5
+    qg = q.reshape(B, Hk, g, Dh).astype(jnp.float32)
+
+    if fmt == "bf16":
+        logits = jnp.einsum(
+            "bhgd,bhsd->bhgs", qg, entry["k"].astype(jnp.float32)
+        ) * scale
+        mask = valid[:, None, None, :]
+        if head_mask is not None:
+            mask = mask & head_mask[:, :, None, :]
+        logits = jnp.where(mask, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgs,bhsd->bhgd", probs, entry["v"].astype(jnp.float32))
+        return out.reshape(B, Hq, Dh)
+
+    # paper §2.2 formal compute, 8-bit QK^T: quantize q per (b,h,g) row and
+    # run an int8×int8 MXU dot with int32 accumulation — no dequantized f32
+    # copy of the key cache is ever materialized (§Perf iteration A2).
+    q_scale = jnp.maximum(jnp.max(jnp.abs(qg), axis=-1, keepdims=True), 1e-8) / 127.0
+    q_q = jnp.clip(jnp.round(qg / q_scale), -127, 127).astype(jnp.int8)
+    logits_i = jnp.einsum(
+        "bhgd,bhsd->bhgs", q_q, entry["k"], preferred_element_type=jnp.int32
+    )
+    logits = (
+        logits_i.astype(jnp.float32)
+        * q_scale
+        * entry["k_scale"][:, :, None, :]
+        * scale
+    )
+    mask = valid[:, None, None, :]
+    if head_mask is not None:
+        mask = mask & head_mask[:, :, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # paper's 8-bit PV (§Perf iteration A3): fold the per-key v_scale into
+    # the probs, quantize the weighted probs per (b,h,g) row to int8, and
+    # keep V int8 in the dot (f32 accumulation on the MXU).
+    w = probs * entry["v_scale"][:, :, None, :]  # (B,Hk,g,S)
+    w_scale = jnp.maximum(jnp.max(w, axis=-1, keepdims=True), 1e-20) / 127.0
+    w_q = jnp.clip(jnp.round(w / w_scale), 0, 127).astype(jnp.int8)
+    out = jnp.einsum(
+        "bhgs,bhsd->bhgd", w_q, entry["v"], preferred_element_type=jnp.float32
+    )
+    out = out * w_scale
+    return out.reshape(B, Hq, Dh)
+
+
+def _bgpp_decode_attend(q, entry, valid, cfg):
+    """BGPP progressive *gather* decode (paper §3.3 + §4.5, TPU-adapted;
+    §Perf iteration C1).
+
+    Round 0 scores the magnitude MSB plane of every valid key; each later
+    round fetches (gathers) the next plane for the surviving half only —
+    a static-shape realization of the paper's early termination whose HBM
+    traffic is the packed bytes of survivors, not the whole cache.  The
+    final candidate set (k_max = keep_ratio·S) is gathered once at full
+    precision and consumed by the exact int8 formal compute (A2/A3).
+
+    entry: heads-major bgpp stack slices — k_planes (NBITS,B,Hk,S,D/8),
+    k_sign/(B,Hk,S,D/8), k_scale/v_scale (B,Hk,S), v (B,Hk,S,D).
+    q: (B, Hq, Dh).
+    """
+    mo = cfg.mcbp
+    B, Hq, Dh = q.shape
+    Hk = cfg.num_kv_heads
+    g = Hq // Hk
+    S = valid.shape[1]
+
+    # quantize the query (paper: 4-bit MSB precompute)
+    qg = q.reshape(B, Hk, g, Dh).astype(jnp.float32)
+    dq = jnp.maximum(jnp.max(jnp.abs(qg), axis=-1, keepdims=True), 1e-8) / 127.0
+    q_int = jnp.clip(jnp.round(qg / dq), -127, 127).astype(jnp.int32)
+    q_int = bgpp_mod._truncate_query(q_int, kvc.NBITS, bgpp_mod.DEFAULT_QUERY_BITS)
+    qf = q_int.astype(jnp.float32)  # (B,Hk,g,D)
+
+    rounds = max(1, min(mo.bgpp_rounds, kvc.NBITS))
+    k_max = max(1, min(S, int(math.ceil(mo.bgpp_keep_ratio * S))))
+
+    def plane_scores(plane_bits, sign_bits, qf_):
+        """signed plane contribution: (..., S', D) bits -> (B,Hk,g,S')."""
+        signed = jnp.where(sign_bits.astype(bool), -1.0, 1.0) * plane_bits
+        return jnp.einsum("bhgd,bhsd->bhgs", qf_, signed)
+
+    # ---- round 0: MSB plane of every valid key ---------------------------
+    p0 = kvc.NBITS - 1
+    plane = bitslice.unpack_bits(entry["k_planes"][p0], axis=-1).astype(jnp.float32)
+    sign = bitslice.unpack_bits(entry["k_sign"], axis=-1)
+    partial = plane_scores(plane, sign, qf) * float(2**p0)  # (B,Hk,g,S)
+    score_h = jnp.max(partial, axis=2)  # GQA union
+    score_h = jnp.where(valid[:, None, :], score_h, NEG_INF)
+
+    # ---- progressive rounds: halve the candidate set, gather next plane --
+    # pure-gather formulation: cur_idx tracks the global ids of survivors;
+    # scores/partials shrink with the set, nothing is scattered back
+    cur_idx = None  # None = all S keys
+    for r in range(1, rounds):
+        k_r = max(k_max, S >> r)
+        _, li = jax.lax.top_k(score_h, k_r)  # local ids in the current set
+        cur_idx = li if cur_idx is None else jnp.take_along_axis(cur_idx, li, axis=2)
+        partial = jnp.take_along_axis(partial, li[:, :, None, :], axis=3)
+        take = lambda x, i=cur_idx: jnp.take_along_axis(x, i[..., None], axis=2)
+        p_r = kvc.NBITS - 1 - r
+        plane_g = bitslice.unpack_bits(
+            take(entry["k_planes"][p_r]), axis=-1
+        ).astype(jnp.float32)  # (B,Hk,k_r,D)
+        sign_g = bitslice.unpack_bits(take(entry["k_sign"]), axis=-1)
+        partial = partial + plane_scores(plane_g, sign_g, qf) * float(2**p_r)
+        score_h = jnp.max(partial, axis=2)
+        score_h = jnp.where(
+            jnp.take_along_axis(
+                jnp.broadcast_to(valid[:, None, :], (B, Hk, S)), cur_idx, axis=2
+            ),
+            score_h, NEG_INF,
+        )
+
+    # ---- formal compute on the final k_max set ----------------------------
+    _, li = jax.lax.top_k(score_h, k_max)
+    idx = li if cur_idx is None else jnp.take_along_axis(cur_idx, li, axis=2)
+    take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
+    planes_g = jnp.stack(
+        [take(entry["k_planes"][pp]) for pp in range(kvc.NBITS)], axis=0
+    )  # (NBITS,B,Hk,k,D/8)
+    sign_g = take(entry["k_sign"])
+    k_q = kvc.bitplanes_to_k(planes_g, sign_g).astype(jnp.int8)  # (B,Hk,k,D)
+    gathered = {
+        "k": k_q,
+        "k_scale": jnp.take_along_axis(entry["k_scale"], idx, axis=2),
+        "v": take(entry["v"]),
+        "v_scale": jnp.take_along_axis(entry["v_scale"], idx, axis=2),
+    }
+    idx_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid[:, None, :], (B, Hk, S)), idx, axis=2
+    )
+    # int8 formal compute with per-(b,h) candidate masks
+    return _decode_attend(
+        q, gathered,
+        valid=jnp.ones((B, k_max), bool), cfg=cfg, fmt="int8",
+        head_mask=idx_valid,
+    )
+
+
+# --------------------------------------------------------------------------
+# per-layer decode bodies
+# --------------------------------------------------------------------------
+
+
+def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules):
+    """x: (B, 1, D).  Returns (out (B,1,D), cache)."""
+    B = x.shape[0]
+    fmt = layout.kv_format
+    h = layers.apply_norm(x, p["attn_norm"], cfg.norm) if "attn_norm" in p else x
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    use_rope = cfg.family != "hybrid"
+    q, k, v = layers.qkv_project(
+        p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        positions if use_rope else None, theta, qk_norm=cfg.qk_norm,
+    )
+    kind, w = cfg.layer_attn_window(layer_idx)
+    is_local = layer_idx in layout.local_layers
+
+    if is_local:
+        li = layout.local_layers.index(layer_idx)
+        W = layout.local_window
+        slot = jnp.mod(pos, W)
+        store = cache["local"]
+        kq, ks = kvc.quantize_kv(k)
+        vq, vs = kvc.quantize_kv(v)
+        # heads-major writes: (B,1,Hk,D) -> (B,Hk,1,D)
+        kq_h = jnp.swapaxes(kq, 1, 2)
+        vq_h = jnp.swapaxes(vq, 1, 2)
+        if "k_scale" in store:
+            store["k"] = jax.lax.dynamic_update_slice(
+                store["k"], kq_h[None], (li, 0, 0, slot, 0))
+            store["v"] = jax.lax.dynamic_update_slice(
+                store["v"], vq_h[None], (li, 0, 0, slot, 0))
+            store["k_scale"] = jax.lax.dynamic_update_slice(
+                store["k_scale"], jnp.swapaxes(ks, 1, 2)[None], (li, 0, 0, slot))
+            store["v_scale"] = jax.lax.dynamic_update_slice(
+                store["v_scale"], jnp.swapaxes(vs, 1, 2)[None], (li, 0, 0, slot))
+        else:
+            store["k"] = jax.lax.dynamic_update_slice(
+                store["k"], jnp.swapaxes(k, 1, 2).astype(store["k"].dtype)[None],
+                (li, 0, 0, slot, 0))
+            store["v"] = jax.lax.dynamic_update_slice(
+                store["v"], jnp.swapaxes(v, 1, 2).astype(store["v"].dtype)[None],
+                (li, 0, 0, slot, 0))
+        store["abs_pos"] = jax.lax.dynamic_update_slice(
+            store["abs_pos"],
+            jnp.broadcast_to(pos, (1, B, 1)).astype(jnp.int32),
+            (li, 0, slot),
+        )
+        cache["local"] = store
+        abs_pos = store["abs_pos"][li]  # (B, W)
+        if kind == "chunked":
+            valid = (abs_pos >= 0) & (abs_pos // w == pos // w) & (abs_pos <= pos)
+        else:
+            valid = (abs_pos >= 0) & (pos - abs_pos < w)
+        entry = {n: store[n][li] for n in store if n != "abs_pos"}
+        fmt_l = "int8" if "k_scale" in store else "bf16"
+        out = _decode_attend(q[:, 0], entry, valid, cfg, fmt_l)
+    else:
+        gi = layout.global_layers.index(layer_idx)
+        store = cache["global"]
+        if fmt == "bgpp":
+            kq, ks = kvc.quantize_kv(k)
+            planes, sign = kvc.k_to_bitplanes(kq)  # (NBITS,B,1,Hk,D/8)
+            store["k_planes"] = jax.lax.dynamic_update_slice(
+                store["k_planes"], jnp.swapaxes(planes, 2, 3)[None],
+                (gi, 0, 0, 0, pos, 0))
+            store["k_sign"] = jax.lax.dynamic_update_slice(
+                store["k_sign"], jnp.swapaxes(sign, 1, 2)[None],
+                (gi, 0, 0, pos, 0))
+            store["k_scale"] = jax.lax.dynamic_update_slice(
+                store["k_scale"], jnp.swapaxes(ks, 1, 2)[None], (gi, 0, 0, pos))
+            vq, vs = kvc.quantize_kv(v)
+            store["v"] = jax.lax.dynamic_update_slice(
+                store["v"], jnp.swapaxes(vq, 1, 2)[None], (gi, 0, 0, pos, 0))
+            store["v_scale"] = jax.lax.dynamic_update_slice(
+                store["v_scale"], jnp.swapaxes(vs, 1, 2)[None], (gi, 0, 0, pos))
+            cache["global"] = store
+            valid = jnp.arange(layout.max_seq)[None, :] <= pos
+            valid = jnp.broadcast_to(valid, (B, layout.max_seq))
+            entry = {n: store[n][gi] for n in store}
+            out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
+        elif fmt == "int8":
+            kq, ks = kvc.quantize_kv(k)
+            vq, vs = kvc.quantize_kv(v)
+            store["k"] = jax.lax.dynamic_update_slice(
+                store["k"], jnp.swapaxes(kq, 1, 2)[None], (gi, 0, 0, pos, 0))
+            store["v"] = jax.lax.dynamic_update_slice(
+                store["v"], jnp.swapaxes(vq, 1, 2)[None], (gi, 0, 0, pos, 0))
+            store["k_scale"] = jax.lax.dynamic_update_slice(
+                store["k_scale"], jnp.swapaxes(ks, 1, 2)[None], (gi, 0, 0, pos))
+            store["v_scale"] = jax.lax.dynamic_update_slice(
+                store["v_scale"], jnp.swapaxes(vs, 1, 2)[None], (gi, 0, 0, pos))
+            cache["global"] = store
+            valid = jnp.arange(layout.max_seq)[None, :] <= pos
+            valid = jnp.broadcast_to(valid, (B, layout.max_seq))
+            entry = {n: store[n][gi] for n in store}
+            out = _decode_attend(q[:, 0], entry, valid, cfg, "int8")
+        else:
+            store["k"] = jax.lax.dynamic_update_slice(
+                store["k"], jnp.swapaxes(k, 1, 2).astype(store["k"].dtype)[None],
+                (gi, 0, 0, pos, 0))
+            store["v"] = jax.lax.dynamic_update_slice(
+                store["v"], jnp.swapaxes(v, 1, 2).astype(store["v"].dtype)[None],
+                (gi, 0, 0, pos, 0))
+            cache["global"] = store
+            valid = jnp.arange(layout.max_seq)[None, :] <= pos
+            valid = jnp.broadcast_to(valid, (B, layout.max_seq))
+            entry = {n: store[n][gi] for n in store}
+            out = _decode_attend(q[:, 0], entry, valid, cfg, "bf16")
+
+    out = out.reshape(B, 1, -1) @ p["attn"]["wo"]
+    if cfg.post_norms and "post_attn_norm" in p:
+        out = layers.apply_norm(out, p["post_attn_norm"], cfg.norm)
+    return out, cache
+
+
+def _ffn_decode_layer(p, cfg, x, rules=None):
+    h = layers.apply_norm(x, p["mlp_norm"] if "mlp_norm" in p else p["norm2"], cfg.norm)
+    if "moe" in p:
+        out, _ = moe.moe_apply(p["moe"], h, cfg, rules=rules)
+    else:
+        out = layers.mlp_apply(p["mlp"], h, cfg.activation)
+    if cfg.post_norms and "post_mlp_norm" in p:
+        out = layers.apply_norm(out, p["post_mlp_norm"], cfg.norm)
+    return out
+
+
+def _mamba_decode_layer(p, cfg, layout, cache, x, layer_idx, rules=None):
+    mi = layout.mamba_layers.index(layer_idx)
+    h = layers.apply_norm(x, p["norm1"], cfg.norm)
+    state = {
+        "h": cache["mamba"]["h"][mi],
+        "conv": cache["mamba"]["conv"][mi],
+    }
+    out, new_state = mamba2.mixer_decode_step(p["mamba"], cfg, h, state, rules)
+    h_new = new_state["h"]
+    if rules is not None:
+        # pin the (B, heads, P, N) state update: the outer-product einsum
+        # otherwise drops the head (model) sharding and every one of
+        # jamba's 63 mamba layers materializes an unsharded ~1 GB temp
+        h_new = sh.constrain(h_new, rules, (sh.BATCH, sh.FF, None, None))
+    cache["mamba"]["h"] = cache["mamba"]["h"].at[mi].set(h_new)
+    cache["mamba"]["conv"] = cache["mamba"]["conv"].at[mi].set(
+        new_state["conv"].astype(cache["mamba"]["conv"].dtype)
+    )
+    return out, cache
+
+
+def _sinusoid_at(pos, dim: int) -> jax.Array:
+    """Single-position sinusoidal embedding (avoids a (max_seq, D) constant)."""
+    half = dim // 2
+    div = jnp.exp(
+        jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim)
+    )
+    ang = pos.astype(jnp.float32) * div
+    out = jnp.zeros((dim,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang))
+    return out.at[1::2].set(jnp.cos(ang))
+
+
+# --------------------------------------------------------------------------
+# serve_step builders
+# --------------------------------------------------------------------------
+
+
+def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
+    dtype = layers._dtype(cfg.dtype)
+    thetas = transformer.layer_thetas(cfg) if cfg.family != "ssm" else None
+
+    def serve_step(params, cache, tokens):
+        pos = cache["pos"]
+        B = tokens.shape[0]
+        x = params["embed"][tokens[:, :1]].astype(dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+        x = sh.constrain(x, rules, (sh.BATCH, None, None))
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            for i in range(cfg.num_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                a, cache = _attn_decode_layer(
+                    p, cfg, layout, cache, x, pos, i, float(thetas[i]), rules
+                )
+                x = x + a
+                x = x + _ffn_decode_layer(p, cfg, x, rules)
+        elif cfg.family == "ssm":
+            for i in range(cfg.num_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                m, cache = _mamba_decode_layer(
+                    {"norm1": p["norm"], "mamba": p["mixer"]}, cfg, layout,
+                    cache, x, i, rules,
+                )
+                x = x + m
+        elif cfg.family == "hybrid":
+            period = cfg.attn_every
+            for i in range(cfg.num_layers):
+                b, j = divmod(i, period)
+                p = jax.tree.map(lambda a: a[b], params["blocks"][f"pos{j}"])
+                if cfg.layer_is_attention(i):
+                    pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
+                    a, cache = _attn_decode_layer(
+                        pa, cfg, layout, cache, x, pos, i, cfg.rope_theta, rules
+                    )
+                    x = x + a
+                else:
+                    m, cache = _mamba_decode_layer(p, cfg, layout, cache, x, i, rules)
+                    x = x + m
+                x = x + _ffn_decode_layer(p, cfg, x, rules)
+        elif cfg.family == "enc_dec":
+            x = x + _sinusoid_at(pos, cfg.d_model).astype(dtype)[None, None]
+            for i in range(cfg.num_layers):
+                p = jax.tree.map(lambda a: a[i], params["decoder"])
+                pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
+                a, cache = _attn_decode_layer(
+                    pa, cfg, layout, cache, x, pos, i, cfg.rope_theta, rules
+                )
+                x = x + a
+                # cross attention over the (precomputed) encoder memory
+                h = layers.apply_norm(x, p["norm_x"], cfg.norm)
+                q = (h @ p["xattn"]["wq"]).reshape(
+                    B, cfg.num_heads, cfg.head_dim
+                )
+                out = _decode_attend(
+                    q,
+                    {"k": cache["cross_k"][i], "v": cache["cross_v"][i]},
+                    jnp.ones((B, cfg.encoder_seq), bool),
+                    cfg,
+                    "bf16",
+                )
+                x = x + out.reshape(B, 1, -1) @ p["xattn"]["wo"]
+                h = layers.apply_norm(x, p["norm2"], cfg.norm)
+                x = x + layers.mlp_apply(p["mlp"], h, "gelu")
+        else:
+            raise ValueError(cfg.family)
+
+        x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+        head = params.get("lm_head")
+        logits = x @ (head if head is not None else params["embed"].T.astype(dtype))
+        logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
+        cache["pos"] = pos + 1
+        return logits, cache
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# prefill (build the cache from a prompt) — transformer families
+# --------------------------------------------------------------------------
+
+
+def prefill(params, cfg, layout: kvc.CacheLayout, tokens, rules=sh.ShardingRules(),
+            **fw_kw):
+    """Runs the forward pass, returning (last_logits, populated cache).
+
+    Transformer families only (mamba/hybrid prefill state capture is in the
+    per-family paths of the examples); decode cells of the dry-run take the
+    cache as an *input spec*, so this is the serving-path utility.
+    """
+    assert cfg.family in ("dense", "moe", "vlm")
+    logits, _, kvs = transformer.forward(
+        params, cfg, tokens, rules, return_kv=True, **fw_kw
+    )
+    k_all, v_all = kvs  # (L, B, S, Hk, Dh)
+    cache, _ = kvc.init_cache(cfg, layout)
+    S = tokens.shape[1]
+
+    def put_global(store, gi, k, v):
+        # stores are heads-major: (B, S, Hk, D) -> (B, Hk, S, D)
+        if "k_scale" in store:
+            kq, ks = kvc.quantize_kv(k)
+            vq, vs = kvc.quantize_kv(v)
+            store["k"] = store["k"].at[gi, :, :, :S].set(jnp.swapaxes(kq, 1, 2))
+            store["v"] = store["v"].at[gi, :, :, :S].set(jnp.swapaxes(vq, 1, 2))
+            store["k_scale"] = store["k_scale"].at[gi, :, :, :S].set(
+                jnp.swapaxes(ks, 1, 2))
+            store["v_scale"] = store["v_scale"].at[gi, :, :, :S].set(
+                jnp.swapaxes(vs, 1, 2))
+        else:
+            store["k"] = store["k"].at[gi, :, :, :S].set(
+                jnp.swapaxes(k, 1, 2).astype(store["k"].dtype))
+            store["v"] = store["v"].at[gi, :, :, :S].set(
+                jnp.swapaxes(v, 1, 2).astype(store["v"].dtype))
+        return store
+
+    for gi, layer in enumerate(layout.global_layers):
+        k, v = k_all[layer], v_all[layer]
+        if layout.kv_format == "bgpp":
+            store = cache["global"]
+            kq, ks = kvc.quantize_kv(k)
+            planes, sign = kvc.k_to_bitplanes(kq)  # (NBITS,B,S,Hk,D/8)
+            store["k_planes"] = store["k_planes"].at[gi, :, :, :, :S].set(
+                jnp.swapaxes(planes, 2, 3))
+            store["k_sign"] = store["k_sign"].at[gi, :, :, :S].set(
+                jnp.swapaxes(sign, 1, 2))
+            store["k_scale"] = store["k_scale"].at[gi, :, :, :S].set(
+                jnp.swapaxes(ks, 1, 2))
+            vq, vs = kvc.quantize_kv(v)
+            store["v"] = store["v"].at[gi, :, :, :S].set(jnp.swapaxes(vq, 1, 2))
+            store["v_scale"] = store["v_scale"].at[gi, :, :, :S].set(
+                jnp.swapaxes(vs, 1, 2))
+            cache["global"] = store
+        else:
+            cache["global"] = put_global(cache["global"], gi, k, v)
+
+    W = layout.local_window
+    for li, layer in enumerate(layout.local_layers):
+        # keep the last W positions in ring order (slot = pos % W)
+        k, v = k_all[layer], v_all[layer]
+        take = min(W, S)
+        pos_abs = jnp.arange(S - take, S)
+        slots = jnp.mod(pos_abs, W)
+        store = cache["local"]
+        # heads-major ring (Ll, B, Hk, W, D): .at[li, :, :, slots] yields
+        # (take, B, Hk, D) with the advanced dim in front — the (B, take,
+        # Hk, D) sources just swap their first two axes
+        if "k_scale" in store:
+            kq, ks = kvc.quantize_kv(k[:, -take:])
+            vq, vs = kvc.quantize_kv(v[:, -take:])
+            store["k"] = store["k"].at[li, :, :, slots].set(jnp.swapaxes(kq, 0, 1))
+            store["v"] = store["v"].at[li, :, :, slots].set(jnp.swapaxes(vq, 0, 1))
+            store["k_scale"] = store["k_scale"].at[li, :, :, slots].set(
+                jnp.swapaxes(ks, 0, 1))
+            store["v_scale"] = store["v_scale"].at[li, :, :, slots].set(
+                jnp.swapaxes(vs, 0, 1))
+        else:
+            store["k"] = store["k"].at[li, :, :, slots].set(
+                jnp.swapaxes(k[:, -take:].astype(store["k"].dtype), 0, 1))
+            store["v"] = store["v"].at[li, :, :, slots].set(
+                jnp.swapaxes(v[:, -take:].astype(store["v"].dtype), 0, 1))
+        store["abs_pos"] = store["abs_pos"].at[li, :, slots].set(
+            jnp.broadcast_to(pos_abs, (tokens.shape[0], take)).T
+        )
+        cache["local"] = store
+
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits[:, -1:], cache

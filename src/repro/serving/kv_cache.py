@@ -1,0 +1,247 @@
+"""KV-cache containers for the serving engine.
+
+Three storage formats (MCBPOptions.weight_format governs weights; the cache
+format here is chosen by ``kv_format``):
+
+  bf16 — dense baseline.
+  int8 — per-token/head symmetric INT8 K and V (+f32 scales) — the paper's
+         Atom-style 8-bit KV baseline; halves the decode memory term.
+  bgpp — K magnitudes stored as packed bit-planes (+ sign plane, + scale)
+         so the BGPP predictor fetches one plane per round; V stays int8.
+
+Mixed local/global attention stacks (gemma3, mixtral SWA, llama4 chunked)
+keep two stacks: local layers get a ring buffer of ``window`` slots, global
+layers the full sequence — this is what makes gemma3/llama4 ``long_500k``
+memory-feasible.  Logical-axis specs accompany every array so the dry-run
+can shard caches ((pod,)data over batch, or sequence for long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+from repro.distributed import sharding as sh
+
+Tree = Dict[str, Any]
+
+NBITS = bitslice.WEIGHT_MAG_BITS  # 7 magnitude planes + sign
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Static description of one model's decode cache."""
+
+    arch: str
+    family: str
+    batch: int
+    max_seq: int
+    kv_format: str  # bf16 | int8 | bgpp
+    global_layers: Tuple[int, ...] = ()
+    local_layers: Tuple[int, ...] = ()
+    local_window: int = 0
+    mamba_layers: Tuple[int, ...] = ()
+    has_cross: bool = False  # whisper encoder memory
+
+
+def layout_for(cfg, batch: int, max_seq: int, kv_format: str = "int8") -> CacheLayout:
+    glob, loc, mamba = [], [], []
+    window = 0
+    for i in range(cfg.num_layers):
+        if not cfg.layer_is_attention(i):
+            mamba.append(i)
+            continue
+        kind, w = cfg.layer_attn_window(i)
+        if kind in ("sliding",) and w > 0:
+            loc.append(i)
+            window = w
+        elif kind == "chunked" and w > 0:
+            # chunked attention never needs more than the chunk in cache
+            loc.append(i)
+            window = w
+        else:
+            glob.append(i)
+    return CacheLayout(
+        arch=cfg.name,
+        family=cfg.family,
+        batch=batch,
+        max_seq=max_seq,
+        kv_format=kv_format,
+        global_layers=tuple(glob),
+        local_layers=tuple(loc),
+        local_window=min(window, max_seq) if window else 0,
+        mamba_layers=tuple(mamba),
+        has_cross=cfg.family == "enc_dec",
+    )
+
+
+# --------------------------------------------------------------------------
+# allocation
+# --------------------------------------------------------------------------
+
+
+def _kv_stack(n_layers, B, S, Hk, Dh, kv_format, dtype):
+    # heads-major (B, Hk, S, D) layout: decode attention needs no transpose,
+    # so the int8->f32 dequant fuses into the QK/PV dots instead of
+    # materializing f32 copies of the cache (§Perf iteration A1)
+    p: Tree = {}
+    if n_layers == 0:
+        return p
+    if kv_format == "bf16":
+        p["k"] = jnp.zeros((n_layers, B, Hk, S, Dh), dtype)
+        p["v"] = jnp.zeros((n_layers, B, Hk, S, Dh), dtype)
+    elif kv_format == "int8":
+        for n in ("k", "v"):
+            p[n] = jnp.zeros((n_layers, B, Hk, S, Dh), jnp.int8)
+            p[f"{n}_scale"] = jnp.zeros((n_layers, B, Hk, S), jnp.float32)
+    elif kv_format == "bgpp":
+        assert Dh % 8 == 0
+        p["k_planes"] = jnp.zeros((n_layers, NBITS, B, Hk, S, Dh // 8), jnp.uint8)
+        p["k_sign"] = jnp.zeros((n_layers, B, Hk, S, Dh // 8), jnp.uint8)
+        p["k_scale"] = jnp.zeros((n_layers, B, Hk, S), jnp.float32)
+        p["v"] = jnp.zeros((n_layers, B, Hk, S, Dh), jnp.int8)
+        p["v_scale"] = jnp.zeros((n_layers, B, Hk, S), jnp.float32)
+    else:
+        raise ValueError(kv_format)
+    return p
+
+
+def _kv_stack_specs(kv_format):
+    if kv_format == "bf16":
+        ax = (sh.LAYERS, sh.BATCH, sh.KV_HEADS, sh.SEQ, None)
+        return {"k": ax, "v": ax}
+    if kv_format == "int8":
+        s = {}
+        for n in ("k", "v"):
+            s[n] = (sh.LAYERS, sh.BATCH, sh.KV_HEADS, sh.SEQ, None)
+            s[f"{n}_scale"] = (sh.LAYERS, sh.BATCH, sh.KV_HEADS, sh.SEQ)
+        return s
+    if kv_format == "bgpp":
+        # NOTE: no SEQ sharding — the progressive top-k uses global indices,
+        # and gathers across a sharded seq dim degenerate into per-round
+        # all-gathers of the whole plane arrays.  The scalable design is
+        # shard-local top-k + a small merge collective (distattention-style),
+        # which belongs to the Pallas kernel path (DESIGN.md §2); the jnp
+        # dry-run variant shards batch/heads only.
+        return {
+            "k_planes": (sh.LAYERS, None, sh.BATCH, sh.KV_HEADS, None, None),
+            "k_sign": (sh.LAYERS, sh.BATCH, sh.KV_HEADS, None, None),
+            "k_scale": (sh.LAYERS, sh.BATCH, sh.KV_HEADS, None),
+            "v": (sh.LAYERS, sh.BATCH, sh.KV_HEADS, None, None),
+            "v_scale": (sh.LAYERS, sh.BATCH, sh.KV_HEADS, None),
+        }
+    raise ValueError(kv_format)
+
+
+def cache_specs(cfg, layout: CacheLayout) -> Tree:
+    """Logical-axis specs for the cache — pure (no allocation, dry-run path)."""
+    specs: Tree = {"pos": ()}
+    if layout.global_layers:
+        specs["global"] = _kv_stack_specs(layout.kv_format)
+    if layout.local_layers:
+        fmt = "int8" if layout.kv_format == "bgpp" else layout.kv_format
+        s = _kv_stack_specs(fmt)
+        s["abs_pos"] = (sh.LAYERS, sh.BATCH, None)
+        specs["local"] = s
+    if layout.mamba_layers:
+        specs["mamba"] = {
+            "h": (sh.LAYERS, sh.BATCH, sh.FF, None, None),
+            "conv": (sh.LAYERS, sh.BATCH, None, sh.FF),
+        }
+    if layout.has_cross:
+        specs["cross_k"] = (sh.LAYERS, sh.BATCH, sh.KV_HEADS, None, None)
+        specs["cross_v"] = (sh.LAYERS, sh.BATCH, sh.KV_HEADS, None, None)
+    return specs
+
+
+def init_cache_arrays(cfg, layout: CacheLayout) -> Tree:
+    """Cache pytree (zeros).  Safe under jax.eval_shape for the dry-run."""
+    B, S = layout.batch, layout.max_seq
+    dtype = _dt(cfg.dtype)
+    cache: Tree = {"pos": jnp.zeros((), jnp.int32)}
+    if layout.global_layers:
+        cache["global"] = _kv_stack(
+            len(layout.global_layers), B, S, cfg.num_kv_heads, cfg.head_dim,
+            layout.kv_format, dtype,
+        )
+    if layout.local_layers:
+        # local ring buffers stay dense (int8): windows are small, and BGPP
+        # targets the big global/full caches (paper's long-context case)
+        fmt = "int8" if layout.kv_format == "bgpp" else layout.kv_format
+        p = _kv_stack(
+            len(layout.local_layers), B, layout.local_window,
+            cfg.num_kv_heads, cfg.head_dim, fmt, dtype,
+        )
+        # ring buffers hold absolute positions for RoPE-correct reuse
+        p["abs_pos"] = jnp.full(
+            (len(layout.local_layers), B, layout.local_window), -1, jnp.int32
+        )
+        cache["local"] = p
+    if layout.mamba_layers:
+        d_in = cfg.ssm_expand * cfg.d_model
+        nheads = d_in // cfg.ssm_head_dim
+        cache["mamba"] = {
+            "h": jnp.zeros(
+                (len(layout.mamba_layers), B, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            "conv": jnp.zeros(
+                (len(layout.mamba_layers), B, cfg.ssm_conv - 1,
+                 d_in + 2 * cfg.ssm_state),
+                dtype,
+            ),
+        }
+    if layout.has_cross:
+        cache["cross_k"] = jnp.zeros(
+            (cfg.num_layers, B, cfg.num_kv_heads, cfg.encoder_seq, cfg.head_dim),
+            dtype,
+        )
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def init_cache(cfg, layout: CacheLayout) -> Tuple[Tree, Tree]:
+    """Returns (cache pytree, logical-axis specs)."""
+    return init_cache_arrays(cfg, layout), cache_specs(cfg, layout)
+
+
+def cache_bytes(cache: Tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# --------------------------------------------------------------------------
+# quantized read/write helpers
+# --------------------------------------------------------------------------
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(B, 1, Hk, Dh) -> int8 + per (B,1,Hk) scale."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def k_to_bitplanes(k_q: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int8 K (B, 1, Hk, Dh) -> (planes (NBITS,B,1,Hk,Dh/8), sign (B,1,Hk,Dh/8))."""
+    sign, mag = bitslice.to_sign_magnitude(k_q)
+    planes = bitslice.bitplanes(mag, NBITS)
+    return bitslice.pack_bits(planes, axis=-1), bitslice.pack_bits(sign, axis=-1)
+
+
+def bitplanes_to_k(planes: jax.Array, sign: jax.Array) -> jax.Array:
+    """Inverse (used by the exact formal-compute stage) -> int32 values."""
+    mag = bitslice.from_bitplanes(bitslice.unpack_bits(planes, axis=-1))
+    return bitslice.from_sign_magnitude(bitslice.unpack_bits(sign, axis=-1), mag)

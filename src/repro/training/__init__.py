@@ -1,0 +1,1 @@
+from repro.training.train_step import TrainState, make_train_step, make_loss_fn  # noqa: F401

@@ -1,0 +1,151 @@
+"""Training step: loss, grads, AdamW update — built per (config, rules).
+
+Supports remat (blocked attention already checkpoints its KV scan; the layer
+scans are rematerialized via jax.checkpoint when ``remat=True``), gradient
+accumulation (microbatching over the leading batch dim), and the int8/ZeRO
+optimizer.  The returned function is pure and pjit-compatible — the dry-run
+lowers it directly for the train_4k / prefill_32k cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.models import model_zoo
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Tree
+    opt: Tree
+
+    @classmethod
+    def create(cls, params: Tree, opt_cfg: AdamWConfig) -> "TrainState":
+        return cls(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def _as_tree(state: TrainState) -> Tree:
+    return {"params": state.params, "opt": state.opt}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; labels < 0 are masked out.
+
+    Written as ``lse(logits) - logits[label]`` so the (B,S,V) tensor is only
+    consumed by fused reductions/gathers — no f32 log-softmax copy is ever
+    materialized (matters at vocab 200k+: that copy alone is ~4 GB/device
+    on the train_4k cells).
+    """
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(
+        jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1)
+    )
+    gold = jnp.take_along_axis(shifted, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def make_loss_fn(cfg, rules: sh.ShardingRules, fwd_kwargs: Optional[Dict] = None):
+    fwd_kwargs = fwd_kwargs or {}
+
+    def loss_fn(params, batch):
+        logits, aux = model_zoo.forward(params, cfg, batch, rules, **fwd_kwargs)
+        labels = batch["labels"]
+        logits = logits[:, -labels.shape[1] :]  # drop VLM prefix positions
+        ce = cross_entropy(logits, labels)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg,
+    rules: sh.ShardingRules,
+    opt_cfg: AdamWConfig,
+    fwd_kwargs: Optional[Dict] = None,
+    grad_accum: int = 1,
+    param_specs: Optional[Tree] = None,
+) -> Callable[[Tree, Dict[str, jax.Array]], Tuple[Tree, Dict[str, jax.Array]]]:
+    """Returns train_step(state_tree, batch) -> (state_tree, metrics).
+
+    ``state_tree`` = {"params": ..., "opt": ...} (a plain pytree so the
+    dry-run can build ShapeDtypeStructs for it).  ``param_specs`` (logical
+    axes) keeps the grad-accumulation scan carry sharded — GSPMD's while
+    propagation otherwise replicates it (≈ a full param copy per device).
+    """
+    loss_fn = make_loss_fn(cfg, rules, fwd_kwargs)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(tree: Tree) -> Tree:
+        if param_specs is None:
+            return tree
+        is_leaf = lambda x: isinstance(x, tuple)
+        flat_s, treedef = jax.tree_util.tree_flatten(param_specs, is_leaf=is_leaf)
+        flat_t = treedef.flatten_up_to(tree)
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [sh.constrain(t, rules, ax) for t, ax in zip(flat_t, flat_s)],
+        )
+
+    def one_grad(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: Tree, batch: Dict[str, jax.Array]):
+        params = state["params"]
+        if grad_accum > 1:
+            # microbatch over the leading batch dim (static split)
+            def micro(carry, mb):
+                loss, metrics, grads = one_grad(params, mb)
+                acc_loss, acc_grads = carry
+                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                return (acc_loss + loss, constrain_grads(acc_grads)), metrics
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+                batch,
+            )
+            zero = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (loss, grads), metrics = jax.lax.scan(micro, (0.0, zero), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = one_grad(params, batch)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, rules: sh.ShardingRules, fwd_kwargs: Optional[Dict] = None):
+    """Inference prefill: forward only, returns last-position logits.
+
+    This is what the prefill_32k cells lower: the full forward at 32k with
+    blocked attention, no gradient state.
+    """
+    fwd_kwargs = fwd_kwargs or {}
+
+    def prefill_step(params, batch):
+        logits, _ = model_zoo.forward(params, cfg, batch, rules, **fwd_kwargs)
+        return logits[:, -1:]
+
+    return prefill_step

@@ -1,0 +1,1 @@
+from repro.utils import synthetic  # noqa: F401

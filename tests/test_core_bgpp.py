@@ -1,0 +1,151 @@
+"""BGPP: progressive prediction recall, traffic accounting, batched/GQA path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention, bgpp, bitslice, topk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_keys(rng, S, D, nbits=7):
+    k = np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127).astype(np.int32)
+    sign = (k < 0).astype(np.uint8)
+    mag = np.abs(k).astype(np.uint8)
+    planes = np.stack([(mag >> p) & 1 for p in range(nbits)]).astype(np.uint8)
+    return k, jnp.asarray(planes), jnp.asarray(sign)
+
+
+class TestBGPPPredict:
+    def test_exact_scores_with_all_rounds_full_precision_query(self):
+        rng = np.random.default_rng(0)
+        S, D = 32, 16
+        k, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        cfg = bgpp.BGPPConfig(rounds=7, alpha=1e9, radius=1.0, query_bits=7)
+        alive, est, stats = bgpp.bgpp_predict(q, planes, sign, cfg)
+        ref = k @ np.asarray(q)
+        np.testing.assert_allclose(np.asarray(est), ref.astype(np.float32))
+        assert bool(jnp.all(alive))  # huge alpha -> nothing pruned
+
+    def test_top_scoring_key_always_survives(self):
+        rng = np.random.default_rng(1)
+        S, D = 64, 32
+        k, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        scale = 1.0 / np.sqrt(D) / 900.0  # roughly logit scale
+        cfg = bgpp.BGPPConfig(rounds=4, alpha=0.55)
+        alive, est, _ = bgpp.bgpp_predict(q, planes, sign, cfg, logit_scale=scale)
+        true_best = int(np.argmax(k @ np.asarray(q)))
+        assert bool(alive[true_best])
+
+    def test_pruning_reduces_traffic(self):
+        rng = np.random.default_rng(2)
+        S, D = 128, 32
+        k, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        scale = 1.0 / np.sqrt(D) / 900.0
+        # annealed alphas (default): conservative early rounds, bounded by
+        # sign + 4 planes of every key, and < the full 8-bit fetch
+        cfg = bgpp.BGPPConfig(rounds=4, alpha=0.4)
+        alive, _, stats = bgpp.bgpp_predict(q, planes, sign, cfg, logit_scale=scale)
+        upper = S * D / 8.0 * (4 + 1)
+        assert float(stats.predict_bytes) <= upper + 1e-6
+        assert float(stats.predict_bytes) < float(stats.full_bytes)
+        # flat (paper Eq.1 fixed-alpha) schedule prunes from round 0 and
+        # beats the value-level 4-bit baseline when pruning bites
+        cfg2 = bgpp.BGPPConfig(rounds=4, alpha=0.4, alpha_schedule=(0.4,))
+        alive2, _, stats2 = bgpp.bgpp_predict(q, planes, sign, cfg2, logit_scale=scale)
+        if int(jnp.sum(alive2)) < S // 2:
+            assert float(stats2.predict_bytes) < float(stats2.value_topk_bytes)
+
+    def test_alive_counts_monotone_nonincreasing(self):
+        rng = np.random.default_rng(3)
+        S, D = 64, 16
+        _, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        cfg = bgpp.BGPPConfig(rounds=5, alpha=0.5)
+        _, _, stats = bgpp.bgpp_predict(
+            q, planes, sign, cfg, logit_scale=1.0 / (16 * 900)
+        )
+        counts = np.asarray(stats.alive_per_round)[:5]
+        assert (np.diff(counts) <= 0).all()
+
+    def test_min_keys_floor(self):
+        rng = np.random.default_rng(4)
+        S, D = 64, 16
+        _, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        cfg = bgpp.BGPPConfig(rounds=6, alpha=0.01, min_keys=8)
+        alive, _, _ = bgpp.bgpp_predict(q, planes, sign, cfg, logit_scale=1e-5)
+        assert int(jnp.sum(alive)) >= 8
+
+    def test_valid_mask_respected(self):
+        rng = np.random.default_rng(5)
+        S, D = 32, 16
+        _, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        valid = jnp.arange(S) < 20
+        alive, _, _ = bgpp.bgpp_predict(
+            q, planes, sign, bgpp.BGPPConfig(rounds=3), valid=valid
+        )
+        assert not bool(jnp.any(alive[20:]))
+
+
+class TestBGPPRecall:
+    def test_recall_of_true_topk(self):
+        """Keys kept by BGPP should cover most of the true top-k set."""
+        rng = np.random.default_rng(6)
+        S, D = 256, 64
+        k, planes, sign = make_keys(rng, S, D)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        scale = 1.0 / np.sqrt(D) / 900.0
+        cfg = bgpp.BGPPConfig(rounds=4, alpha=0.6)
+        alive, _, _ = bgpp.bgpp_predict(q, planes, sign, cfg, logit_scale=scale)
+        true_scores = k @ np.asarray(q)
+        top8 = np.argsort(true_scores)[-8:]
+        recall = np.asarray(alive)[top8].mean()
+        assert recall >= 0.75, recall
+
+
+class TestBatched:
+    def test_batched_shapes_and_gqa_union(self):
+        rng = np.random.default_rng(7)
+        B, S, Hk, Hq, D, nbits = 2, 32, 2, 4, 16, 7
+        k = np.clip(np.round(rng.normal(size=(B, S, Hk, D)) * 30), -127, 127).astype(
+            np.int32
+        )
+        sign = jnp.asarray((k < 0).astype(np.uint8))
+        mag = np.abs(k).astype(np.uint8)
+        planes = jnp.asarray(
+            np.stack([(mag >> p) & 1 for p in range(nbits)]).astype(np.uint8)
+        )
+        q = jnp.asarray(rng.integers(-60, 60, size=(B, Hq, D)), jnp.int32)
+        alive, est = bgpp.bgpp_predict_batched(
+            q, planes, sign, bgpp.BGPPConfig(rounds=3), logit_scale=1.0 / (D * 900)
+        )
+        assert alive.shape == (B, Hk, S)
+        assert est.shape == (B, Hq, S)
+
+    def test_topk_indices_static_shape(self):
+        alive = jnp.asarray([[True, False, True, True]])
+        est = jnp.asarray([[1.0, 9.0, 3.0, 2.0]])
+        idx, valid = bgpp.alive_to_topk_indices(alive, est, k_max=3)
+        assert idx.shape == (1, 3)
+        kept = set(np.asarray(idx[0])[np.asarray(valid[0])].tolist())
+        assert kept == {0, 2, 3} - set()  # masked-out key 1 never selected
+
+
+class TestValueTopKBaseline:
+    def test_value_topk_selects_true_top(self):
+        rng = np.random.default_rng(8)
+        S, D = 128, 32
+        k = jnp.asarray(
+            np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127), jnp.int8
+        )
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        idx, est, stats = topk.value_topk_predict(q, k, k_keep=16)
+        true = np.argsort(np.asarray(k, np.int64) @ np.asarray(q))[-4:]
+        assert len(set(true) & set(np.asarray(idx).tolist())) >= 3
+        assert float(stats.predict_bytes) == S * D * 0.5

@@ -1,0 +1,173 @@
+"""Unit + property tests for bit-slice decomposition and quantization."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitslice, quantization
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_int8(rng, shape, lo=-127, hi=127):
+    return jnp.asarray(rng.integers(lo, hi + 1, size=shape, dtype=np.int64), jnp.int8)
+
+
+class TestSignMagnitude:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        w = rand_int8(rng, (16, 32))
+        s, m = bitslice.to_sign_magnitude(w)
+        np.testing.assert_array_equal(
+            np.asarray(bitslice.from_sign_magnitude(s, m)), np.asarray(w, np.int32)
+        )
+
+    def test_planes_roundtrip(self):
+        rng = np.random.default_rng(1)
+        mag = jnp.asarray(rng.integers(0, 128, size=(8, 24)), jnp.uint8)
+        planes = bitslice.bitplanes(mag)
+        assert planes.shape == (7, 8, 24)
+        np.testing.assert_array_equal(
+            np.asarray(bitslice.from_bitplanes(planes)), np.asarray(mag, np.int32)
+        )
+
+    @given(st.integers(min_value=-127, max_value=127))
+    @settings(max_examples=50, deadline=None)
+    def test_scalar_roundtrip(self, v):
+        w = jnp.asarray([[v]], jnp.int8)
+        s, m = bitslice.to_sign_magnitude(w)
+        planes = bitslice.bitplanes(m)
+        rec = bitslice.from_sign_magnitude(s, bitslice.from_bitplanes(planes))
+        assert int(rec[0, 0]) == v
+
+    def test_signed_split_disjoint(self):
+        rng = np.random.default_rng(2)
+        w = rand_int8(rng, (8, 16))
+        pos, neg = bitslice.signed_plane_split(w)
+        assert int(jnp.max(pos * neg)) == 0  # disjoint support
+        np.testing.assert_array_equal(np.asarray(pos - neg), np.asarray(w, np.int32))
+
+
+class TestBitPacking:
+    def test_pack_unpack(self):
+        rng = np.random.default_rng(3)
+        bits = jnp.asarray(rng.integers(0, 2, size=(5, 7, 64)), jnp.uint8)
+        packed = bitslice.pack_bits(bits, axis=-1)
+        assert packed.shape == (5, 7, 8)
+        np.testing.assert_array_equal(
+            np.asarray(bitslice.unpack_bits(packed, axis=-1)), np.asarray(bits)
+        )
+
+    def test_pack_other_axis(self):
+        rng = np.random.default_rng(4)
+        bits = jnp.asarray(rng.integers(0, 2, size=(16, 3)), jnp.uint8)
+        packed = bitslice.pack_bits(bits, axis=0)
+        assert packed.shape == (2, 3)
+        np.testing.assert_array_equal(
+            np.asarray(bitslice.unpack_bits(packed, axis=0)), np.asarray(bits)
+        )
+
+    def test_bad_length(self):
+        with pytest.raises(ValueError):
+            bitslice.pack_bits(jnp.zeros((5,), jnp.uint8))
+
+    def test_bitplanar_tensor_roundtrip(self):
+        rng = np.random.default_rng(5)
+        w = rand_int8(rng, (4, 6, 16))
+        bp = bitslice.BitPlanarTensor.from_int(w)
+        np.testing.assert_array_equal(np.asarray(bp.to_int()), np.asarray(w, np.int32))
+        assert bp.mag_planes.shape == (7, 4, 6, 2)
+
+
+class TestGrouping:
+    def test_group_indices_values(self):
+        # rows [1,0,1,1] (LSB=row0) in one column -> 1 + 4 + 8 = 13
+        planes = jnp.asarray([[1], [0], [1], [1]], jnp.uint8)
+        idx = bitslice.group_indices(planes, 4)
+        assert idx.shape == (1, 1) and int(idx[0, 0]) == 13
+
+    def test_enumeration_matrix(self):
+        e = np.asarray(bitslice.enumeration_matrix(3))
+        assert e.shape == (3, 8)
+        for c in range(8):
+            val = sum(int(e[j, c]) << j for j in range(3))
+            assert val == c
+
+    def test_sparsity_stats(self):
+        planes = jnp.zeros((3, 4, 4), jnp.uint8).at[0].set(1)
+        sp = np.asarray(bitslice.bit_sparsity(planes))
+        np.testing.assert_allclose(sp, [0.0, 1.0, 1.0])
+
+
+class TestQuantization:
+    def test_weight_roundtrip_small_error(self):
+        rng = np.random.default_rng(6)
+        w = jnp.asarray(rng.normal(size=(32, 64)) * 0.1, jnp.float32)
+        qw = quantization.quantize_weight(w)
+        assert qw.q.dtype == jnp.int8
+        err = np.abs(np.asarray(qw.dequantize()) - np.asarray(w))
+        # max error bounded by scale/2 per channel
+        bound = np.asarray(qw.scale)[:, None] * 0.5 + 1e-7
+        assert (err <= bound).all()
+
+    def test_activation_zero_exact(self):
+        x = jnp.asarray([[0.0, 1.0, -3.0, 2.5]], jnp.float32)
+        qa = quantization.quantize_activation(x)
+        deq = np.asarray(qa.dequantize())
+        assert abs(deq[0, 0]) < 1e-6  # zero stays exactly representable
+
+    def test_quantized_linear_matches_float(self):
+        rng = np.random.default_rng(7)
+        w = jnp.asarray(rng.normal(size=(16, 32)) * 0.2, jnp.float32)
+        x = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+        y_ref = w @ x
+        y_q = quantization.quantized_linear(
+            quantization.quantize_weight(w), quantization.quantize_activation(x)
+        )
+        rel = np.linalg.norm(np.asarray(y_q) - np.asarray(y_ref)) / np.linalg.norm(
+            np.asarray(y_ref)
+        )
+        assert rel < 0.02, rel
+
+    def test_int_matmul_exact(self):
+        rng = np.random.default_rng(8)
+        a = rand_int8(rng, (8, 16))
+        b = rand_int8(rng, (16, 4))
+        np.testing.assert_array_equal(
+            np.asarray(quantization.int_matmul(a, b)),
+            np.asarray(a, np.int64) @ np.asarray(b, np.int64),
+        )
+
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_weight_quant_error_bound_property(self, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+        _, rel = quantization.quantization_error(w)
+        assert float(rel) < 0.02
+
+
+class TestHighOrderPlaneSparsity:
+    """The paper's core observation: LLM-like weights → sparse high planes.
+
+    Uses the outlier-channel synthetic generator calibrated to the paper's
+    Fig. 8(c) profile (see repro.utils.synthetic).
+    """
+
+    def test_llm_weights_high_plane_sparsity(self):
+        from repro.utils.synthetic import synthetic_llm_weight
+
+        rng = np.random.default_rng(9)
+        w = synthetic_llm_weight(rng, (256, 256))
+        qw = quantization.quantize_weight(jnp.asarray(w))
+        _, mag = bitslice.to_sign_magnitude(qw.q)
+        sp = np.asarray(bitslice.bit_sparsity(bitslice.bitplanes(mag)))
+        # paper Fig. 8c: planes 3-7 (idx 2..6) all exceed 65% sparsity
+        assert (sp[2:] > 0.55).all() and (sp[4:] > 0.65).all(), sp
+        avg_bs = float(np.mean(sp))
+        vs = float((np.asarray(qw.q) == 0).mean())
+        assert avg_bs > 0.65  # paper: bs~ ≈ 0.70
+        assert avg_bs > 5 * vs  # paper Fig. 5d: bit sparsity ~10x value sparsity

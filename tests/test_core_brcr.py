@@ -1,0 +1,118 @@
+"""BRCR: exactness of the enumeration-matrix factorization + cost model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import brcr
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_w(rng, m_rows, h, scale=40):
+    w = np.clip(rng.normal(size=(m_rows, h)) * scale, -127, 127)
+    return jnp.asarray(np.round(w), jnp.int8)
+
+
+class TestBRCRExactness:
+    @pytest.mark.parametrize("m", [1, 2, 4, 5])
+    @pytest.mark.parametrize("shape", [(8, 32), (20, 64), (16, 128)])
+    def test_matches_dense_int(self, m, shape):
+        M, H = shape
+        if M % m:
+            M = (M // m + 1) * m
+        rng = np.random.default_rng(m * 100 + H)
+        w = rand_w(rng, M, H)
+        x = jnp.asarray(rng.integers(-100, 100, size=(H, 8)), jnp.int32)
+        y = brcr.brcr_matmul(w, x, m=m)
+        ref = np.asarray(w, np.int64) @ np.asarray(x, np.int64)
+        np.testing.assert_array_equal(np.asarray(y, np.int64), ref)
+
+    def test_matches_dense_float(self):
+        rng = np.random.default_rng(0)
+        w = rand_w(rng, 16, 64)
+        x = jnp.asarray(rng.normal(size=(64, 4)), jnp.float32)
+        y = brcr.brcr_matmul(w, x, m=4)
+        ref = np.asarray(w, np.float32).astype(np.float64) @ np.asarray(
+            x, np.float64
+        )
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-3)
+
+    def test_paper_example_fig4(self):
+        # Fig. 4(c): LSB matrix with repeated columns; E @ (I @ X) == W @ X
+        w = jnp.asarray(
+            [[1, 0, 1, 0, 1], [0, 1, 0, 1, 1], [1, 1, 1, 1, 0]], jnp.int8
+        )
+        x = jnp.arange(5, dtype=jnp.int32).reshape(5, 1)
+        # m=3 (whole matrix as one group)
+        y = brcr.brcr_matmul(w, x, m=3, nbits=1)
+        np.testing.assert_array_equal(
+            np.asarray(y)[:, 0], np.asarray(w, np.int64) @ np.arange(5)
+        )
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_property_random(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rand_w(rng, 8, 32, scale=60)
+        x = jnp.asarray(rng.integers(-50, 50, size=(32, 3)), jnp.int32)
+        y = brcr.brcr_matmul(w, x, m=4)
+        ref = np.asarray(w, np.int64) @ np.asarray(x, np.int64)
+        np.testing.assert_array_equal(np.asarray(y, np.int64), ref)
+
+
+class TestMAV:
+    def test_merged_activation_vector(self):
+        # two groups of columns with identical patterns accumulate
+        idx = jnp.asarray([[2, 2, 1, 0]], jnp.int32)  # G=1, H=4
+        x = jnp.asarray([[1.0], [10.0], [100.0], [1000.0]])
+        z = brcr.merged_activation_vector(idx, x, m=2)
+        assert z.shape == (1, 4, 1)
+        np.testing.assert_allclose(
+            np.asarray(z[0, :, 0]), [1000.0, 100.0, 11.0, 0.0]
+        )
+
+    def test_reconstruct_is_E_times_Z(self):
+        rng = np.random.default_rng(1)
+        z = jnp.asarray(rng.normal(size=(2, 16, 3)), jnp.float32)
+        y = brcr.reconstruct(z, m=4)
+        e = np.asarray(
+            ((np.arange(16)[None] >> np.arange(4)[:, None]) & 1), np.float32
+        )
+        ref = np.einsum("jc,gcn->gjn", e, np.asarray(z))
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-6)
+
+
+class TestCostModel:
+    def test_cost_reduction_on_sparse_weights(self):
+        from repro.utils.synthetic import synthetic_llm_weight_int8
+
+        rng = np.random.default_rng(2)
+        # H >> 2^m so reconstruction amortizes (paper's regime: H ~ 4k-12k)
+        w_q, _ = synthetic_llm_weight_int8(rng, (32, 2048))
+        cost = brcr.brcr_cost(jnp.asarray(w_q), m=4)
+        assert cost.adds_total < cost.adds_bsc_baseline
+        assert cost.bit_sparsity > 0.6
+        assert cost.reduction_vs_bsc > 0.2
+
+    def test_closed_form_sweet_spot(self):
+        # paper Fig. 18: optimum m around 4-5 for H~4k, bs~0.7
+        m_star = brcr.optimal_group_size(4096, 7, 0.70)
+        assert m_star in (4, 5, 6)
+
+    def test_closed_form_monotonic_pieces(self):
+        c1 = brcr.brcr_cost_closed_form(4096, 1, 7, 0.7)["adds_total"]
+        c5 = brcr.brcr_cost_closed_form(4096, 5, 7, 0.7)["adds_total"]
+        c11 = brcr.brcr_cost_closed_form(4096, 11, 7, 0.7)["adds_total"]
+        assert c5 < c1  # grouping helps
+        assert c5 < c11  # 2^m reconstruction blowup hurts for large m
+
+    def test_measured_cost_scales_with_n(self):
+        rng = np.random.default_rng(3)
+        w = rand_w(rng, 16, 64)
+        c1 = brcr.brcr_cost(w, n_cols=1)
+        c8 = brcr.brcr_cost(w, n_cols=8)
+        assert c8.adds_total == 8 * c1.adds_total

@@ -1,0 +1,121 @@
+"""BSTC: lossless two-state coding roundtrips + compression-ratio behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bstc, quantization
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def sparse_plane(rng, m_rows, h, density):
+    return (rng.random((m_rows, h)) < density).astype(np.uint8)
+
+
+class TestPlaneCodec:
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.3, 0.9, 1.0])
+    def test_roundtrip(self, density):
+        rng = np.random.default_rng(int(density * 100))
+        plane = sparse_plane(rng, 16, 64, density)
+        enc = bstc.encode_plane(plane, m=4)
+        dec = np.asarray(bstc.decode_plane(enc))
+        np.testing.assert_array_equal(dec, plane)
+
+    def test_encoded_bits_formula(self):
+        rng = np.random.default_rng(1)
+        plane = sparse_plane(rng, 8, 32, 0.1)
+        enc = bstc.encode_plane(plane, m=4)
+        # H indicators per group row + m bits per nonzero column
+        grp = plane.reshape(2, 4, 32)
+        patt = (grp * (1 << np.arange(4))[None, :, None]).sum(1)
+        nnz = int((patt != 0).sum())
+        assert enc.encoded_bits == 2 * 32 + 4 * nnz
+
+    def test_paper_example(self):
+        # {0000} -> {0} and {0001} -> {10001}: 1 zero col + 1 nonzero col
+        plane = np.zeros((4, 2), np.uint8)
+        plane[0, 1] = 1  # column 1 pattern = 0001
+        enc = bstc.encode_plane(plane, m=4)
+        assert enc.encoded_bits == 2 + 4  # two indicators + one 4b pattern
+
+    @given(st.integers(0, 2**31 - 1), st.floats(0.01, 0.5))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_property(self, seed, density):
+        rng = np.random.default_rng(seed)
+        plane = sparse_plane(rng, 8, 24, density)
+        enc = bstc.encode_plane(plane, m=4)
+        np.testing.assert_array_equal(np.asarray(bstc.decode_plane(enc)), plane)
+
+
+class TestWeightCodec:
+    def test_weight_roundtrip_lossless(self):
+        rng = np.random.default_rng(2)
+        w = np.clip(np.round(rng.normal(size=(32, 64)) * 20), -127, 127).astype(
+            np.int8
+        )
+        bw = bstc.encode_weight(w, scale=np.ones(32, np.float32))
+        dec = np.asarray(bstc.decode_weight(bw))
+        np.testing.assert_array_equal(dec, w)
+
+    def test_llm_weight_compresses(self):
+        from repro.utils.synthetic import synthetic_llm_weight
+
+        rng = np.random.default_rng(3)
+        w_f = synthetic_llm_weight(rng, (128, 256))
+        qw = quantization.quantize_weight(jnp.asarray(w_f))
+        bw = bstc.encode_weight(np.asarray(qw.q), np.asarray(qw.scale))
+        # paper reports higher CR on real checkpoints (correlated zeros);
+        # uncorrelated synthetic stats land around 1.2-1.3x — still >1.
+        assert bw.compression_ratio > 1.15, bw.compression_ratio
+        # high-order planes got compressed, low-order stayed raw
+        assert bw.encoded[6] is not None and bw.encoded[0] is None
+        np.testing.assert_array_equal(np.asarray(bstc.decode_weight(bw)), np.asarray(qw.q))
+
+    def test_force_planes_matches_paper_default(self):
+        rng = np.random.default_rng(4)
+        w = np.clip(np.round(rng.normal(size=(16, 32)) * 30), -127, 127).astype(
+            np.int8
+        )
+        bw = bstc.encode_weight(
+            w, scale=np.ones(16, np.float32), force_planes=[2, 3, 4, 5, 6]
+        )
+        assert [e is not None for e in bw.encoded] == [False, False, True, True, True, True, True]
+        np.testing.assert_array_equal(np.asarray(bstc.decode_weight(bw)), w)
+
+    def test_dense_weight_does_not_compress(self):
+        rng = np.random.default_rng(5)
+        w = rng.integers(-127, 128, size=(16, 32)).astype(np.int8)  # uniform: dense planes
+        bw = bstc.encode_weight(w, scale=np.ones(16, np.float32))
+        # uniform weights have ~50% bit sparsity -> nothing above threshold
+        assert all(e is None for e in bw.encoded[:5])
+        np.testing.assert_array_equal(np.asarray(bstc.decode_weight(bw)), w)
+
+
+class TestCRClosedForm:
+    def test_cr_positive_above_threshold(self):
+        # paper Fig 8(b): CR > 1 once BIT sparsity exceeds ~65% (m=4)
+        hi = bstc.expected_column_sparsity(0.80, 4)
+        lo = bstc.expected_column_sparsity(0.55, 4)
+        assert bstc.compression_ratio_closed_form(4, hi) > 1.0
+        assert bstc.compression_ratio_closed_form(4, lo) < 1.0
+
+    def test_m1_never_compresses(self):
+        # m=1: 1 indicator per bit -> CR = 1/(1 + (1-sc)) <= 1
+        for sc in (0.1, 0.5, 0.99):
+            assert bstc.compression_ratio_closed_form(1, sc) <= 1.0
+
+    def test_cr_m_tradeoff(self):
+        # larger m amortizes indicators but reduces all-zero column probability
+        bs = 0.85
+        crs = {
+            m: bstc.compression_ratio_closed_form(
+                m, bstc.expected_column_sparsity(bs, m)
+            )
+            for m in (1, 2, 4, 8, 16)
+        }
+        best = max(crs, key=crs.get)
+        assert best in (2, 4, 8)  # interior optimum, paper picks m=4

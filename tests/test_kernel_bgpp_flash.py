@@ -1,0 +1,122 @@
+"""bgpp_score + flash_attention kernels vs oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import bitslice
+from repro.kernels.bgpp_score import bgpp_score_round
+from repro.kernels.bgpp_score.ref import bgpp_score_round_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestBGPPScoreKernel:
+    @pytest.mark.parametrize("S,D", [(64, 64), (256, 128), (512, 64)])
+    def test_matches_ref(self, S, D):
+        rng = np.random.default_rng(S + D)
+        k = np.clip(np.round(rng.normal(size=(S, D)) * 30), -127, 127).astype(
+            np.int32
+        )
+        sign = (k < 0).astype(np.uint8)
+        mag = np.abs(k).astype(np.uint8)
+        p = 5
+        plane = ((mag >> p) & 1).astype(np.uint8)
+        q = jnp.asarray(rng.integers(-60, 60, size=(D,)), jnp.int32)
+        alive = jnp.asarray(rng.random(S) < 0.6)
+        got = bgpp_score_round(
+            q,
+            bitslice.pack_bits(jnp.asarray(plane), axis=-1),
+            bitslice.pack_bits(jnp.asarray(sign), axis=-1),
+            alive,
+            tile_s=64,
+            interpret=True,
+        )
+        ref = bgpp_score_round_ref(q, jnp.asarray(plane), jnp.asarray(sign), alive)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_dead_tiles_zero(self):
+        rng = np.random.default_rng(0)
+        S, D = 128, 64
+        plane = jnp.asarray(rng.integers(0, 2, size=(S, D)), jnp.uint8)
+        sign = jnp.zeros((S, D), jnp.uint8)
+        q = jnp.ones((D,), jnp.int32)
+        alive = jnp.zeros((S,), bool).at[:64].set(True)
+        got = bgpp_score_round(
+            q,
+            bitslice.pack_bits(plane, axis=-1),
+            bitslice.pack_bits(sign, axis=-1),
+            alive,
+            tile_s=64,
+            interpret=True,
+        )
+        assert not np.any(np.asarray(got[64:]))
+        assert np.any(np.asarray(got[:64]))
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("mask_kind,window", [
+        ("causal", 0), ("sliding", 64), ("chunked", 64), ("full", 0),
+    ])
+    def test_matches_ref_masks(self, mask_kind, window):
+        rng = np.random.default_rng(zlib.crc32(mask_kind.encode()) % 1000)
+        B, S, Hq, Hk, D = 1, 256, 2, 2, 64
+        q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Hk, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Hk, D)), jnp.float32)
+        got = flash_attention(
+            q, k, v, mask_kind=mask_kind, window=window,
+            tile_q=64, tile_k=64, interpret=True,
+        )
+        ref = flash_attention_ref(q, k, v, mask_kind=mask_kind, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref), rtol=2e-3, atol=2e-3
+        )
+
+    def test_gqa_grouping(self):
+        rng = np.random.default_rng(1)
+        B, S, Hq, Hk, D = 2, 128, 4, 2, 32
+        q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Hk, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Hk, D)), jnp.float32)
+        got = flash_attention(q, k, v, tile_q=64, tile_k=64, interpret=True)
+        ref = flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref), rtol=2e-3, atol=2e-3
+        )
+
+    def test_q_offset_decode_continuation(self):
+        """Chunked prefill: second half with q_offset must equal full pass."""
+        rng = np.random.default_rng(2)
+        B, S, H, D = 1, 256, 2, 32
+        q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+        full = flash_attention(q, k, v, tile_q=64, tile_k=64, interpret=True)
+        part = flash_attention(
+            q[:, 128:], k, v, q_offset=128, tile_q=64, tile_k=64, interpret=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(part), np.asarray(full[:, 128:]), rtol=2e-3, atol=2e-3
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(3)
+        B, S, H, D = 1, 128, 2, 64
+        mk = lambda: jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+        q, k, v = mk(), mk(), mk()
+        got = flash_attention(q, k, v, tile_q=64, tile_k=64, interpret=True)
+        ref = flash_attention_ref(q, k, v)
+        assert got.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(ref, np.float32),
+            rtol=2e-2,
+            atol=2e-2,
+        )

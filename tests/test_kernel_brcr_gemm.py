@@ -1,0 +1,78 @@
+"""BRCR GEMM kernel vs oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.brcr_gemm import brcr_gemm, prepare_brcr_operands
+from repro.kernels.brcr_gemm.ref import brcr_gemm_ref, dense_ref
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_case(rng, M, H, N, m=4, x_int=True, tiles=(128, 256, 128)):
+    w_q, _ = synthetic_llm_weight_int8(rng, (M, H))
+    if x_int:
+        x = jnp.asarray(rng.integers(-50, 50, size=(H, N)), jnp.float32)
+    else:
+        x = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+    ops = prepare_brcr_operands(w_q, m=m)
+    tm, tk, tn = tiles
+    y = brcr_gemm(
+        ops, x, tile_m=min(tm, M), tile_k=min(tk, H), tile_n=min(tn, N),
+        interpret=True,
+    )
+    ref = dense_ref(jnp.asarray(w_q), x)
+    return np.asarray(y), np.asarray(ref), ops, x
+
+
+class TestBRCRKernel:
+    @pytest.mark.parametrize(
+        "M,H,N",
+        [(8, 128, 8), (16, 256, 16), (32, 512, 8), (128, 256, 128)],
+    )
+    def test_matches_dense_int_inputs(self, M, H, N):
+        rng = np.random.default_rng(M + H + N)
+        y, ref, _, _ = run_case(rng, M, H, N, tiles=(8, 128, 8))
+        np.testing.assert_allclose(y, ref, rtol=0, atol=0)
+
+    @pytest.mark.parametrize("m", [2, 4])
+    def test_group_sizes(self, m):
+        rng = np.random.default_rng(m)
+        y, ref, _, _ = run_case(rng, 16, 128, 8, m=m, tiles=(16, 128, 8))
+        np.testing.assert_allclose(y, ref, rtol=0, atol=0)
+
+    def test_float_activations_close(self):
+        rng = np.random.default_rng(7)
+        y, ref, _, _ = run_case(
+            rng, 16, 256, 8, x_int=False, tiles=(16, 128, 8)
+        )
+        np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-2)
+
+    def test_matches_factorization_oracle(self):
+        rng = np.random.default_rng(9)
+        _, _, ops, x = run_case(rng, 16, 128, 8, tiles=(16, 128, 8))
+        ref2 = brcr_gemm_ref(ops.group_idx, ops.plane_weights, x, ops.m)
+        ref1 = brcr_gemm(ops, x, tile_m=16, tile_k=128, tile_n=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(ref1), np.asarray(ref2), atol=1e-3)
+
+    def test_n_padding(self):
+        rng = np.random.default_rng(11)
+        y, ref, _, _ = run_case(rng, 16, 128, 5, tiles=(16, 128, 8))
+        assert y.shape == ref.shape == (16, 5)
+        np.testing.assert_allclose(y, ref, atol=0)
+
+    def test_multi_tile_grid(self):
+        rng = np.random.default_rng(13)
+        y, ref, _, _ = run_case(rng, 64, 512, 32, tiles=(32, 128, 16))
+        np.testing.assert_allclose(y, ref, atol=0)
+
+    def test_all_zero_weight_tiles_skipped_result_zero(self):
+        # zero weights -> tile_any all zero -> output must still be exact (0)
+        w_q = np.zeros((16, 128), np.int8)
+        ops = prepare_brcr_operands(w_q)
+        x = jnp.ones((128, 8), jnp.float32)
+        y = brcr_gemm(ops, x, tile_m=16, tile_k=128, tile_n=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y), 0.0)

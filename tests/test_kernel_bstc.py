@@ -1,0 +1,84 @@
+"""BSTC decode + fused matmul kernels vs oracles (interpret mode sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bstc
+from repro.kernels.bstc_decode import bstc_decode_patterns, prepare_encoded_plane
+from repro.kernels.bstc_decode.ref import decode_patterns_ref
+from repro.kernels.bstc_matmul import bstc_matmul, prepare_bstc_matmul_operands
+from repro.kernels.bstc_matmul.ref import bstc_matmul_ref
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestBSTCDecodeKernel:
+    @pytest.mark.parametrize("density", [0.02, 0.2, 0.7])
+    @pytest.mark.parametrize("shape", [(16, 512), (32, 1024)])
+    def test_decode_matches_encode(self, density, shape):
+        rng = np.random.default_rng(int(density * 100) + shape[1])
+        M, H = shape
+        plane = (rng.random((M, H)) < density).astype(np.uint8)
+        enc = bstc.encode_plane(plane, m=4)
+        ops = prepare_encoded_plane(enc, tile_k=256)
+        patt = np.asarray(bstc_decode_patterns(ops, tile_g=4, interpret=True))
+        # oracle: reference prefix-sum decode of the padded representation
+        ref = np.asarray(
+            decode_patterns_ref(jnp.asarray(enc.bitmap), jnp.asarray(ops.patterns))
+        )
+        np.testing.assert_array_equal(patt, ref)
+        # and the patterns expand back to the original plane
+        grp = plane.reshape(M // 4, 4, H)
+        want = (grp * (1 << np.arange(4))[None, :, None]).sum(1)
+        np.testing.assert_array_equal(patt, want)
+
+    def test_all_zero_plane(self):
+        plane = np.zeros((8, 512), np.uint8)
+        enc = bstc.encode_plane(plane, m=4)
+        ops = prepare_encoded_plane(enc, tile_k=256)
+        patt = np.asarray(bstc_decode_patterns(ops, interpret=True))
+        np.testing.assert_array_equal(patt, 0)
+
+
+class TestBSTCMatmulKernel:
+    @pytest.mark.parametrize(
+        "M,H,N", [(16, 512, 8), (32, 512, 16), (128, 1024, 128)]
+    )
+    def test_matches_dense(self, M, H, N):
+        rng = np.random.default_rng(M + H + N)
+        w_q, scale = synthetic_llm_weight_int8(rng, (M, H))
+        x = jnp.asarray(rng.integers(-50, 50, size=(H, N)), jnp.float32)
+        ops = prepare_bstc_matmul_operands(w_q, scale, tile_k=256)
+        assert ops.enc_planes, "synthetic LLM weights must trigger compression"
+        y = bstc_matmul(
+            ops, x, tile_m=min(16, M), tile_n=min(8, N), interpret=True
+        )
+        ref = bstc_matmul_ref(jnp.asarray(w_q), x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=0)
+
+    def test_scale_applied(self):
+        rng = np.random.default_rng(0)
+        w_q, scale = synthetic_llm_weight_int8(rng, (16, 512))
+        x = jnp.asarray(rng.normal(size=(512, 8)), jnp.float32)
+        ops = prepare_bstc_matmul_operands(w_q, scale, tile_k=256)
+        y = bstc_matmul(ops, x, tile_m=16, tile_n=8, apply_scale=True, interpret=True)
+        ref = bstc_matmul_ref(jnp.asarray(w_q), x, jnp.asarray(scale))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5)
+
+    def test_compression_reduces_hbm_bytes(self):
+        rng = np.random.default_rng(1)
+        w_q, scale = synthetic_llm_weight_int8(rng, (128, 1024))
+        ops = prepare_bstc_matmul_operands(w_q, scale)
+        assert ops.hbm_bytes < ops.dense_bytes, (ops.hbm_bytes, ops.dense_bytes)
+
+    def test_uniform_weights_all_raw_still_exact(self):
+        rng = np.random.default_rng(2)
+        w_q = rng.integers(-127, 128, size=(16, 512)).astype(np.int8)
+        x = jnp.asarray(rng.integers(-20, 20, size=(512, 8)), jnp.float32)
+        ops = prepare_bstc_matmul_operands(w_q, tile_k=256)
+        y = bstc_matmul(ops, x, tile_m=16, tile_n=8, interpret=True)
+        ref = bstc_matmul_ref(jnp.asarray(w_q), x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=0)

@@ -1,0 +1,96 @@
+"""ShardingRules: logical-axis mapping, divisibility safety, FSDP/seq modes."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def fake_mesh(shape, names):
+    class M:
+        pass
+
+    m = M()
+    m.shape = dict(zip(names, shape))
+    m.axis_names = names
+    return m
+
+
+class TestRules:
+    def test_default_tp_mapping(self):
+        r = sh.ShardingRules()
+        assert r.spec((sh.VOCAB, sh.D_MODEL)) == P("model", None)
+        assert r.spec((sh.D_MODEL, sh.HEADS)) == P(None, "model")
+        assert r.spec((sh.BATCH, None, None)) == P("data", None, None)
+
+    def test_multipod_batch_axes(self):
+        r = sh.ShardingRules(batch_axes=("pod", "data"))
+        assert r.spec((sh.BATCH, None)) == P(("pod", "data"), None)
+
+    def test_axis_used_once(self):
+        r = sh.ShardingRules()
+        # two model-mapped logical axes: second one must drop
+        assert r.spec((sh.HEADS, sh.KV_HEADS)) == P("model", None)
+
+    def test_fsdp_axes(self):
+        r = sh.ShardingRules(fsdp_axes=(sh.D_MODEL,))
+        assert r.spec((sh.D_MODEL, sh.FF)) == P(("data",), "model")
+
+    def test_seq_shard_mode(self):
+        r = sh.ShardingRules(seq_shard=True)
+        # long-context: KV seq over data, batch replicated
+        assert r.spec((sh.LAYERS, sh.BATCH, sh.SEQ, sh.KV_HEADS, None)) == P(
+            None, None, ("data",), "model", None
+        )
+
+    def test_seq_unsharded_by_default(self):
+        r = sh.ShardingRules()
+        assert r.spec((sh.BATCH, sh.SEQ, None)) == P("data", None, None)
+
+
+class TestDivisibilitySafety:
+    def test_drops_nondividing_axis(self):
+        mesh = fake_mesh((16, 16), ("data", "model"))
+        r = sh.ShardingRules()
+        # kv_heads=1 cannot shard over model=16
+        spec = r.spec_for_shape(mesh, (sh.LAYERS, sh.BATCH, sh.SEQ, sh.KV_HEADS, None),
+                                (4, 128, 32768, 1, 256))
+        assert spec == P(None, "data", None, None, None)
+
+    def test_keeps_dividing_axis(self):
+        mesh = fake_mesh((16, 16), ("data", "model"))
+        r = sh.ShardingRules()
+        spec = r.spec_for_shape(mesh, (sh.D_MODEL, sh.HEADS), (4096, 8192))
+        assert spec == P(None, "model")
+
+    def test_batch_of_one_replicates(self):
+        mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+        r = sh.ShardingRules(batch_axes=("pod", "data"))
+        spec = r.spec_for_shape(mesh, (sh.BATCH, None), (1, 1))
+        assert spec == P(None, None)
+
+    def test_tuple_axis_product(self):
+        mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+        r = sh.ShardingRules(batch_axes=("pod", "data"))
+        # batch 64 divisible by 32 (pod*data)
+        assert r.spec_for_shape(mesh, (sh.BATCH, None), (64, 8)) == P(
+            ("pod", "data"), None
+        )
+        # batch 16 NOT divisible by 32
+        assert r.spec_for_shape(mesh, (sh.BATCH, None), (16, 8)) == P(None, None)
+
+
+class TestRulesForMesh:
+    def test_detects_pod_axis(self):
+        devs = np.asarray(jax.devices()[:1])
+        mesh = Mesh(devs.reshape(1, 1, 1), ("pod", "data", "model"))
+        r = sh.rules_for_mesh(mesh)
+        assert r.batch_axes == ("pod", "data")
+        mesh2 = Mesh(devs.reshape(1, 1), ("data", "model"))
+        r2 = sh.rules_for_mesh(mesh2)
+        assert r2.batch_axes == ("data",)

@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers the full MCBP pipeline (§ Fig. 6): offline BSTC weight compression →
+load/decompress → BRCR GEMM; and the serving flow: prefill → BGPP-filtered
+decode; plus the fault-tolerance story: checkpointed training survives a
+simulated failure with exact data replay.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.core import brcr, bstc
+from repro.data import SyntheticLMDataset
+from repro.distributed import sharding as sh
+from repro.models import model_zoo
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import run_resilient
+from repro.serving import engine, kv_cache as kvc
+from repro.training import make_train_step
+from repro.utils.synthetic import synthetic_llm_weight_int8
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestMCBPPipeline:
+    """Paper Fig. 6 execution flow: compress offline -> decompress -> BRCR."""
+
+    def test_offline_compress_online_compute_exact(self):
+        rng = np.random.default_rng(0)
+        w_q, scale = synthetic_llm_weight_int8(rng, (32, 1024))
+        # offline: BSTC-compress the weight (bit-slice-first storage)
+        bw = bstc.encode_weight(w_q, scale)
+        assert bw.compression_ratio > 1.0
+        # online: decompress and run the BRCR GEMM
+        w_dec = bstc.decode_weight(bw)
+        x = jnp.asarray(rng.integers(-50, 50, size=(1024, 8)), jnp.int32)
+        y = brcr.brcr_matmul(w_dec, x, m=4)
+        ref = np.asarray(w_q, np.int64) @ np.asarray(x, np.int64)
+        np.testing.assert_array_equal(np.asarray(y, np.int64), ref)
+
+    def test_serving_with_full_mcbp_stack(self):
+        """prefill -> BGPP bit-planar decode on a smoke model, finite logits
+        and a growing cache position."""
+        cfg = get_config("deepseek-7b", smoke=True)
+        params, _ = model_zoo.init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(1)
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+        layout = kvc.layout_for(cfg, 2, 48, kv_format="bgpp")
+        logits, cache = engine.prefill(
+            params, cfg, layout, prompts, block_q=8, block_k=8
+        )
+        step = jax.jit(engine.make_serve_step(cfg, layout))
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for i in range(4):
+            logits, cache = step(params, cache, cur)
+            assert bool(jnp.isfinite(logits).all())
+            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        assert int(cache["pos"]) == 16 + 4
+
+
+class TestResilientTraining:
+    def test_training_survives_failure_and_replays_data(self, tmp_path):
+        cfg = get_config("deepseek-7b", smoke=True)
+        params, _ = model_zoo.init(jax.random.key(0), cfg)
+        opt_cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=2, weight_decay=0.0)
+        step_fn = jax.jit(
+            make_train_step(cfg, sh.ShardingRules(), opt_cfg,
+                            fwd_kwargs=dict(block_q=16, block_k=16))
+        )
+        ds = SyntheticLMDataset(cfg.vocab_size, 16, 4, seed=0)
+        ckpt = Checkpointer(str(tmp_path), keep=3, async_save=False)
+
+        state = {"params": params, "opt": adamw_init(params, opt_cfg)}
+        ckpt.save(0, state)
+        holder = {"state": state}
+        seen = []
+        fail_once = {2}
+
+        def train_one(step):
+            if step in fail_once:
+                fail_once.discard(step)
+                raise RuntimeError("simulated preemption")
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+            holder["state"], m = step_fn(holder["state"], batch)
+            seen.append(step)
+            ckpt.save(step + 1, holder["state"])
+
+        def restore():
+            s, holder["state"] = ckpt.restore(holder["state"])
+            return s
+
+        failures = run_resilient(train_one, 0, 5, restore, max_failures=2)
+        assert failures == 1
+        assert seen == [0, 1, 2, 3, 4]  # exact replay after restore
+        assert ckpt.latest_step() == 5
+
+    def test_restored_state_bitwise_identical(self, tmp_path):
+        """Determinism: (train 2 steps) == (train 1, checkpoint, restore,
+        train 1) — the fault-tolerance correctness contract."""
+        cfg = get_config("deepseek-7b", smoke=True)
+        params, _ = model_zoo.init(jax.random.key(2), cfg)
+        opt_cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=1, weight_decay=0.0)
+        step_fn = jax.jit(
+            make_train_step(cfg, sh.ShardingRules(), opt_cfg,
+                            fwd_kwargs=dict(block_q=16, block_k=16))
+        )
+        ds = SyntheticLMDataset(cfg.vocab_size, 16, 4, seed=7)
+        batches = [
+            {k: jnp.asarray(v) for k, v in ds.batch(i).items()} for i in range(2)
+        ]
+
+        s_direct = {"params": params, "opt": adamw_init(params, opt_cfg)}
+        for b in batches:
+            s_direct, _ = step_fn(s_direct, b)
+
+        ckpt = Checkpointer(str(tmp_path), async_save=False)
+        s2 = {"params": params, "opt": adamw_init(params, opt_cfg)}
+        s2, _ = step_fn(s2, batches[0])
+        ckpt.save(1, s2)
+        _, s2r = ckpt.restore(s2)
+        s2r, _ = step_fn(s2r, batches[1])
+
+        for a, b in zip(jax.tree.leaves(s_direct), jax.tree.leaves(s2r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
