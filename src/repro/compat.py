@@ -1,0 +1,167 @@
+"""Version-portability shims for the JAX / Pallas surface this repo uses.
+
+The kernels and the sharding layer were written against a moving JAX API;
+this module resolves every version-drifted symbol ONCE so the rest of the
+tree imports stable names.  Supported range: JAX >= 0.4.37 (the pinned
+toolchain) through current releases.  Anything older raises immediately
+with an explicit minimum-version error instead of failing deep inside a
+``pallas_call``.
+
+Resolved surface:
+
+  ``tpu_compiler_params(**kw)``  pltpu.CompilerParams (new) vs.
+                                 pltpu.TPUCompilerParams (<= 0.4.x)
+  ``get_abstract_mesh()``        jax.sharding.get_abstract_mesh (new) vs.
+                                 the ambient ``with mesh:`` thread resource
+  ``shard_map(...)``             jax.shard_map (new, ``check_vma=``) vs.
+                                 jax.experimental.shard_map (``check_rep=``)
+  ``cost_analysis_dict(c)``      compiled.cost_analysis() returns a dict
+                                 (new) vs. a per-device list (<= 0.4.x)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+MIN_JAX_VERSION = (0, 4, 37)
+
+
+def jax_version() -> tuple:
+    """The running JAX version as an int tuple (pre-release tags dropped).
+
+    Only the LEADING digit run of each component counts: '4rc5' is patch 4,
+    not 45 — concatenating would falsely clear the minimum-version floor.
+    """
+    parts = []
+    for p in jax.__version__.split(".")[:3]:
+        m = re.match(r"\d+", p)
+        parts.append(int(m.group()) if m else 0)
+    return tuple(parts)
+
+
+def require_min_jax(feature: str, minimum: tuple = MIN_JAX_VERSION) -> None:
+    """Raise with an explicit floor when the running JAX is too old."""
+    if jax_version() < minimum:
+        raise RuntimeError(
+            f"{feature} requires JAX >= {'.'.join(map(str, minimum))}; "
+            f"found {jax.__version__}. Upgrade jax/jaxlib."
+        )
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params: renamed TPUCompilerParams -> CompilerParams.
+# --------------------------------------------------------------------------
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """Build the TPU compiler-params object under either pallas API name."""
+    if _COMPILER_PARAMS_CLS is None:  # pragma: no cover - very old jax
+        require_min_jax("pallas TPU compiler params")
+        raise RuntimeError("jax.experimental.pallas.tpu has no CompilerParams")
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+# --------------------------------------------------------------------------
+# Ambient mesh discovery: jax.sharding.get_abstract_mesh landed after 0.4.x;
+# on the pinned toolchain the ``with mesh:`` context lives in thread
+# resources instead.
+# --------------------------------------------------------------------------
+def get_abstract_mesh():
+    """The ambient mesh (abstract or concrete), or None when there is none.
+
+    Callers must accept either a concrete ``jax.sharding.Mesh`` (the
+    ``with mesh:`` form — build a NamedSharding from it) or an AbstractMesh
+    (bare PartitionSpec constraints resolve against it on new JAX).  An
+    axis-less mesh counts as "none": new JAX's get_abstract_mesh returns an
+    empty AbstractMesh rather than None outside any ``use_mesh`` scope.
+    """
+    try:
+        from jax._src import mesh as _mesh_lib
+    except ImportError:  # pragma: no cover - far-future jax
+        _mesh_lib = None
+    fn = getattr(jax.sharding, "get_abstract_mesh", None) or getattr(
+        _mesh_lib, "get_abstract_mesh", None
+    )
+    if fn is not None:
+        try:
+            am = fn()
+        except Exception:
+            am = None
+        if am is not None and getattr(am, "axis_names", ()):
+            return am
+    # fall through to the ambient ``with mesh:`` thread resource
+    tr = getattr(_mesh_lib, "thread_resources", None)
+    if tr is not None:
+        pm = tr.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    return None
+
+
+# --------------------------------------------------------------------------
+# shard_map: promoted to jax.shard_map with check_rep renamed check_vma.
+# --------------------------------------------------------------------------
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, check_vma=None, **kw):
+    """``jax.shard_map`` under both the new and the 0.4.x API.
+
+    Accepts the new-style ``check_vma`` kwarg and translates it to
+    ``check_rep`` on toolchains that predate the rename.
+    """
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# --------------------------------------------------------------------------
+# compiled.cost_analysis(): dict on new JAX, list of per-device dicts on
+# the pinned 0.4.x toolchain.
+# --------------------------------------------------------------------------
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` to one flat dict (device 0)."""
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:  # pragma: no cover - backend-dependent
+        return {}
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return cost
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost and isinstance(cost[0], dict) else {}
+    return {}
+
+
+# --------------------------------------------------------------------------
+# Backend detection (used by the kernel dispatch layer).
+# --------------------------------------------------------------------------
+def default_backend() -> str:
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - uninitialized runtime
+        return "cpu"
+
+
+def is_tpu_backend() -> bool:
+    return default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """True when pallas kernels need interpret mode on this host."""
+    return not is_tpu_backend()
+
+
+require_min_jax("repro.compat", MIN_JAX_VERSION)

@@ -87,6 +87,20 @@ def encode_plane(plane: np.ndarray, m: int) -> EncodedPlane:
     )
 
 
+def expand_patterns(patt: jax.Array, m: int) -> jax.Array:
+    """(G, H) m-bit group patterns -> (G*m, H) {0,1} uint8 plane rows.
+
+    Bit j of the pattern for group g is row ``g*m + j`` — the single place
+    that encodes the group-row bit order (decode_plane, the kernel ref
+    paths, and the round-trip property tests all share it).
+    """
+    G, H = patt.shape
+    shifts = jnp.arange(m, dtype=jnp.int32).reshape(1, m, 1)
+    patt = jnp.asarray(patt).astype(jnp.int32)
+    bits = (jnp.right_shift(patt[:, None, :], shifts) & 1).astype(jnp.uint8)
+    return bits.reshape(G * m, H)
+
+
 def decode_plane(enc: EncodedPlane) -> jax.Array:
     """JAX-traceable inverse of :func:`encode_plane` -> (M, H) uint8 planes.
 
@@ -100,10 +114,7 @@ def decode_plane(enc: EncodedPlane) -> jax.Array:
     pos = jnp.clip(pos, 0, patterns.shape[1] - 1)
     vals = jnp.take_along_axis(patterns, pos.astype(jnp.int32), axis=1)
     patt = jnp.where(bitmap != 0, vals, 0).astype(jnp.int32)  # (G, H)
-    G, H = patt.shape
-    shifts = jnp.arange(enc.m, dtype=jnp.int32).reshape(1, enc.m, 1)
-    bits = (jnp.right_shift(patt[:, None, :], shifts) & 1).astype(jnp.uint8)
-    return bits.reshape(G * enc.m, H)
+    return expand_patterns(patt, enc.m)
 
 
 # ---------------------------------------------------------------------------

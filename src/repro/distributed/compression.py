@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 Tree = Any
 
 
@@ -71,7 +73,7 @@ def make_compressed_dp_grad_fn(
         loss = jax.lax.pmean(loss, data_axis)
         return loss, grads
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(data_axis)),

@@ -24,6 +24,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 # logical axis vocabulary used by the model zoo
 BATCH = "batch"
 SEQ = "seq"  # activation sequence axis (sequence parallelism / long-ctx KV)
@@ -201,16 +203,15 @@ def constrain(x: jax.Array, rules: ShardingRules, logical_axes) -> jax.Array:
     resolvable inside jit); falls back to the ambient abstract mesh.
     """
     try:
-        mesh = rules.mesh
-        if mesh is None:
-            mesh = jax.sharding.get_abstract_mesh()
-            if mesh is None or not mesh.axis_names:
-                return x
-            spec = rules.spec_for_shape(mesh, tuple(logical_axes), x.shape)
-            return jax.lax.with_sharding_constraint(x, spec)
+        mesh = rules.mesh if rules.mesh is not None else compat.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
         spec = rules.spec_for_shape(mesh, tuple(logical_axes), x.shape)
-        return jax.lax.with_sharding_constraint(
-            x, jax.sharding.NamedSharding(mesh, spec)
-        )
+        if isinstance(mesh, Mesh):
+            # concrete mesh (rules-attached, or the ambient ``with mesh:``
+            # form): bare PartitionSpec constraints don't resolve inside
+            # jit there, so wrap in a NamedSharding
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return jax.lax.with_sharding_constraint(x, spec)
     except (ValueError, RuntimeError):
         return x

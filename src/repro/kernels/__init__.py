@@ -2,8 +2,13 @@
 
 Each kernel package ships three files:
   kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
-  ops.py    — jit'd public wrapper (+ offline data preparation)
+  ops.py    — dispatch-routed public wrapper (+ offline data preparation)
   ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Every public wrapper routes through :mod:`repro.kernels.dispatch`, which
+selects compiled-TPU vs. interpret vs. pure-JAX ref execution from the
+backend, the ``REPRO_KERNEL_DISPATCH`` env var, or an explicit ``mode=``
+argument — the same call sites run on CPU CI and real TPUs.
 
 Kernels:
   brcr_gemm       — bit-plane group GEMM via the enumeration factorization
@@ -17,3 +22,14 @@ Kernels:
   flash_attention — tiled online-softmax attention (causal / sliding /
                     chunked masks) for the 32k/500k shapes
 """
+
+from repro.kernels.dispatch import (  # noqa: F401
+    MODE_COMPILED,
+    MODE_INTERPRET,
+    MODE_REF,
+    MODES,
+    dispatch_mode,
+    pallas_dispatch,
+    resolve_mode,
+    set_default_mode,
+)

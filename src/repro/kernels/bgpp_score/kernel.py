@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _unpack_bits_i32(packed: jax.Array) -> jax.Array:
     x = packed.astype(jnp.int32)
@@ -68,7 +70,7 @@ def bgpp_score_pallas(
         ],
         out_specs=pl.BlockSpec((tile_s, 1), lambda s: (s, 0)),
         out_shape=jax.ShapeDtypeStruct((S, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

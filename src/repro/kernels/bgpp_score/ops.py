@@ -1,4 +1,5 @@
-"""jit'd wrapper for one BGPP scoring round over a bit-planar key cache."""
+"""Dispatch-routed wrapper for one BGPP scoring round over a bit-planar
+key cache."""
 
 from __future__ import annotations
 
@@ -7,9 +8,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+from repro.kernels.bgpp_score.ref import bgpp_score_round_ref
+
 
 @functools.partial(jax.jit, static_argnames=("tile_s", "interpret"))
-def bgpp_score_round(
+def _bgpp_pallas_path(
     q: jax.Array,  # (D,) int32 (already MSB-truncated per paper)
     plane_packed: jax.Array,  # (S, D//8) uint8 — magnitude plane p
     sign_packed: jax.Array,  # (S, D//8) uint8
@@ -18,7 +22,6 @@ def bgpp_score_round(
     tile_s: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """(S,) int32 masked plane scores (without the 2^p weighting)."""
     from repro.kernels.bgpp_score.kernel import bgpp_score_pallas
 
     S = plane_packed.shape[0]
@@ -42,3 +45,49 @@ def bgpp_score_round(
         interpret=interpret,
     )
     return out[:S, 0]
+
+
+@jax.jit
+def _bgpp_ref_jit(q, plane_packed, sign_packed, alive):
+    from repro.core.bitslice import unpack_bits
+
+    return bgpp_score_round_ref(
+        q.astype(jnp.int32),
+        unpack_bits(plane_packed),
+        unpack_bits(sign_packed),
+        alive,
+    )
+
+
+def _bgpp_ref_path(q, plane_packed, sign_packed, alive, *, tile_s=256):
+    del tile_s  # the oracle is tiling-free; keep it out of the jit cache key
+    return _bgpp_ref_jit(q, plane_packed, sign_packed, alive)
+
+
+def bgpp_score_round(
+    q: jax.Array,  # (D,) int32
+    plane_packed: jax.Array,  # (S, D//8) uint8
+    sign_packed: jax.Array,  # (S, D//8) uint8
+    alive: jax.Array,  # (S,) bool
+    *,
+    tile_s: int = 256,
+    interpret: bool = False,
+    mode: str | None = None,
+) -> jax.Array:
+    """(S,) int32 masked plane scores (without the 2^p weighting).
+
+    Routing between compiled / interpret / ref is governed by
+    :mod:`repro.kernels.dispatch`.
+    """
+    return dispatch.pallas_dispatch(
+        "bgpp_score",
+        _bgpp_pallas_path,
+        _bgpp_ref_path,
+        q,
+        plane_packed,
+        sign_packed,
+        alive,
+        tile_s=tile_s,
+        mode=mode,
+        interpret=interpret,
+    )

@@ -10,7 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitslice
+from repro.kernels import dispatch
 from repro.kernels.brcr_gemm.kernel import brcr_gemm_pallas
+from repro.kernels.brcr_gemm.ref import brcr_gemm_ref
 
 
 class BRCROperands(NamedTuple):
@@ -89,22 +91,8 @@ def _brcr_gemm_jit(
     )
 
 
-def brcr_gemm(
-    ops: BRCROperands,
-    x: jax.Array,
-    *,
-    tile_m: int = 128,
-    tile_k: int = 256,
-    tile_n: int = 128,
-    interpret: bool = False,
-) -> jax.Array:
-    """Compute ``w_q @ x`` from prepared BRCR operands.  x: (H, N) -> (M, N).
-
-    Pads N up to the tile size (M and H must already be tile-aligned — true
-    for every assigned architecture's projection dims).
-    """
+def _brcr_pallas_path(ops, x, *, tile_m, tile_k, tile_n, interpret):
     H, N = x.shape
-    assert H == ops.H, (H, ops.H)
     tile_m = min(tile_m, ops.M)
     tile_k = min(tile_k, H)
     n_pad = (-N) % tile_n
@@ -121,3 +109,39 @@ def brcr_gemm(
         interpret=interpret,
     )
     return y[:, :N]
+
+
+def _brcr_ref_path(ops, x, *, tile_m, tile_k, tile_n):
+    del tile_m, tile_k, tile_n  # the oracle is tiling-free
+    return brcr_gemm_ref(ops.group_idx, ops.plane_weights, x, ops.m)
+
+
+def brcr_gemm(
+    ops: BRCROperands,
+    x: jax.Array,
+    *,
+    tile_m: int = 128,
+    tile_k: int = 256,
+    tile_n: int = 128,
+    interpret: bool = False,
+    mode: str | None = None,
+) -> jax.Array:
+    """Compute ``w_q @ x`` from prepared BRCR operands.  x: (H, N) -> (M, N).
+
+    Pads N up to the tile size (M and H must already be tile-aligned — true
+    for every assigned architecture's projection dims).  Routing between
+    compiled / interpret / ref is governed by :mod:`repro.kernels.dispatch`.
+    """
+    assert x.shape[0] == ops.H, (x.shape[0], ops.H)
+    return dispatch.pallas_dispatch(
+        "brcr_gemm",
+        _brcr_pallas_path,
+        _brcr_ref_path,
+        ops,
+        x,
+        tile_m=tile_m,
+        tile_k=tile_k,
+        tile_n=tile_n,
+        mode=mode,
+        interpret=interpret,
+    )

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _unpack_bits_i32(packed: jax.Array) -> jax.Array:
     """(..., B) uint8 -> (..., 8B) int32 {0,1}; little-endian within bytes."""
@@ -67,7 +69,7 @@ def bstc_decode_pallas(
         ],
         out_specs=pl.BlockSpec((tile_g, tile_k), lambda g, kt: (g, kt)),
         out_shape=jax.ShapeDtypeStruct((G, H), jnp.uint8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -9,8 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitslice
 from repro.core.bstc import EncodedPlane
+from repro.kernels import dispatch
 from repro.kernels.bstc_decode.kernel import bstc_decode_pallas
+from repro.kernels.bstc_decode.ref import decode_patterns_ref
 
 
 class EncodedPlaneOperands(NamedTuple):
@@ -62,16 +65,7 @@ def _decode_jit(bitmap, tile_offsets, patterns, *, tile_g, tile_k, interpret):
     )
 
 
-def bstc_decode_patterns(
-    ops: EncodedPlaneOperands,
-    *,
-    tile_g: int = 8,
-    interpret: bool = False,
-) -> jax.Array:
-    """Decode to (G, H) uint8 group patterns (BRCR kernel input format).
-
-    The H-tile size is pinned by the prepared per-tile stream offsets.
-    """
+def _decode_pallas_path(ops, *, tile_g, interpret):
     G = ops.bitmap.shape[0]
     tile_k = ops.H // ops.tile_offsets.shape[1]
     return _decode_jit(
@@ -80,6 +74,35 @@ def bstc_decode_patterns(
         ops.patterns,
         tile_g=min(tile_g, G),
         tile_k=tile_k,
+        interpret=interpret,
+    )
+
+
+def _decode_ref_path(ops, *, tile_g):
+    del tile_g  # the oracle is tiling-free
+    return decode_patterns_ref(bitslice.unpack_bits(ops.bitmap), ops.patterns)
+
+
+def bstc_decode_patterns(
+    ops: EncodedPlaneOperands,
+    *,
+    tile_g: int = 8,
+    interpret: bool = False,
+    mode: str | None = None,
+) -> jax.Array:
+    """Decode to (G, H) uint8 group patterns (BRCR kernel input format).
+
+    The H-tile size is pinned by the prepared per-tile stream offsets.
+    Routing between compiled / interpret / ref is governed by
+    :mod:`repro.kernels.dispatch`.
+    """
+    return dispatch.pallas_dispatch(
+        "bstc_decode",
+        _decode_pallas_path,
+        _decode_ref_path,
+        ops,
+        tile_g=tile_g,
+        mode=mode,
         interpret=interpret,
     )
 

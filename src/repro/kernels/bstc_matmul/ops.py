@@ -10,7 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bstc
+from repro.core.bitslice import unpack_bits
+from repro.kernels import dispatch
+from repro.kernels.bstc_decode.ref import decode_patterns_ref
 from repro.kernels.bstc_matmul.kernel import bstc_matmul_pallas
+from repro.kernels.bstc_matmul.ref import bstc_matmul_ref
 
 
 class BSTCMatmulOperands(NamedTuple):
@@ -115,18 +119,26 @@ def _bstc_matmul_jit(
     return y
 
 
-def bstc_matmul(
-    ops: BSTCMatmulOperands,
-    x: jax.Array,
-    *,
-    tile_m: int = 128,
-    tile_n: int = 128,
-    apply_scale: bool = False,
-    interpret: bool = False,
-) -> jax.Array:
-    """``w_q @ x`` (optionally × per-channel scale) from compressed weights."""
+def reconstruct_dense_weight(ops: BSTCMatmulOperands) -> jax.Array:
+    """Losslessly rebuild the int weight (M, H) from compressed operands.
+
+    Pure-jnp inverse of :func:`prepare_bstc_matmul_operands` — the ref
+    dispatch path and the round-trip property tests both lean on it.
+    """
+    mag = jnp.zeros((ops.M, ops.H), jnp.int32)
+    for i, p in enumerate(ops.enc_planes):
+        bitmap, _, patterns = ops.enc[3 * i : 3 * i + 3]
+        patt = decode_patterns_ref(unpack_bits(bitmap), patterns)  # (G, H)
+        rows = bstc.expand_patterns(patt, ops.m)  # (M, H)
+        mag = mag + (rows.astype(jnp.int32) << p)
+    for i, p in enumerate(ops.raw_planes):
+        mag = mag + (unpack_bits(ops.raw[i]).astype(jnp.int32) << p)
+    sign = unpack_bits(ops.sign_bits).astype(jnp.int32)
+    return (1 - 2 * sign) * mag
+
+
+def _bstc_matmul_pallas_path(ops, x, *, tile_m, tile_n, apply_scale, interpret):
     H, N = x.shape
-    assert H == ops.H
     n_pad = (-N) % tile_n
     if n_pad:
         x = jnp.pad(x, ((0, 0), (0, n_pad)))
@@ -138,6 +150,58 @@ def bstc_matmul(
         interpret=interpret,
     )
     return y[:, :N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("enc_planes", "raw_planes", "m", "M", "H")
+)
+def _bstc_ref_jit(
+    enc, raw, sign_bits, x, scale, *, enc_planes, raw_planes, m, M, H
+):
+    ops = BSTCMatmulOperands(
+        enc, raw, sign_bits, None, enc_planes, raw_planes, m, M, H
+    )
+    return bstc_matmul_ref(reconstruct_dense_weight(ops), x, scale)
+
+
+def _bstc_matmul_ref_path(ops, x, *, tile_m, tile_n, apply_scale):
+    del tile_m, tile_n  # the oracle is tiling-free; keep out of the jit key
+    return _bstc_ref_jit(
+        ops.enc, ops.raw, ops.sign_bits, x,
+        ops.scale if apply_scale else None,
+        enc_planes=ops.enc_planes, raw_planes=ops.raw_planes,
+        m=ops.m, M=ops.M, H=ops.H,
+    )
+
+
+def bstc_matmul(
+    ops: BSTCMatmulOperands,
+    x: jax.Array,
+    *,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    apply_scale: bool = False,
+    interpret: bool = False,
+    mode: str | None = None,
+) -> jax.Array:
+    """``w_q @ x`` (optionally × per-channel scale) from compressed weights.
+
+    Routing between compiled / interpret / ref is governed by
+    :mod:`repro.kernels.dispatch`.
+    """
+    assert x.shape[0] == ops.H
+    return dispatch.pallas_dispatch(
+        "bstc_matmul",
+        _bstc_matmul_pallas_path,
+        _bstc_matmul_ref_path,
+        ops,
+        x,
+        tile_m=tile_m,
+        tile_n=tile_n,
+        apply_scale=apply_scale,
+        mode=mode,
+        interpret=interpret,
+    )
 
 
 def _pack8(bits: np.ndarray) -> np.ndarray:

@@ -8,7 +8,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 @functools.partial(
@@ -17,7 +19,7 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
         "mask_kind", "window", "q_offset", "scale", "tile_q", "tile_k", "interpret",
     ),
 )
-def flash_attention(
+def _flash_pallas_path(
     q: jax.Array,  # (B, Sq, Hq, D)
     k: jax.Array,  # (B, Sk, Hk, D)
     v: jax.Array,  # (B, Sk, Hk, D)
@@ -46,3 +48,62 @@ def flash_attention(
         q_offset=q_offset, tile_q=tile_q, tile_k=tile_k, interpret=interpret,
     )
     return jnp.transpose(out.reshape(B, Hq, Sq, D), (0, 2, 1, 3))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mask_kind", "window", "q_offset", "scale")
+)
+def _flash_ref_jit(q, k, v, *, mask_kind, window, q_offset, scale):
+    return flash_attention_ref(
+        q, k, v, mask_kind=mask_kind, window=window, q_offset=q_offset,
+        scale=scale,
+    ).astype(q.dtype)
+
+
+def _flash_ref_path(
+    q, k, v, *,
+    mask_kind="causal", window=0, q_offset=0, scale=None,
+    tile_q=128, tile_k=128,
+):
+    del tile_q, tile_k  # the oracle is tiling-free; keep out of the jit key
+    return _flash_ref_jit(
+        q, k, v, mask_kind=mask_kind, window=window, q_offset=q_offset,
+        scale=scale,
+    )
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hk, D)
+    v: jax.Array,  # (B, Sk, Hk, D)
+    *,
+    mask_kind: str = "causal",
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    tile_q: int = 128,
+    tile_k: int = 128,
+    interpret: bool = False,
+    mode: Optional[str] = None,
+) -> jax.Array:
+    """Tiled online-softmax attention over the model-zoo layout.
+
+    Routing between compiled / interpret / ref is governed by
+    :mod:`repro.kernels.dispatch`.
+    """
+    return dispatch.pallas_dispatch(
+        "flash_attention",
+        _flash_pallas_path,
+        _flash_ref_path,
+        q,
+        k,
+        v,
+        mask_kind=mask_kind,
+        window=window,
+        q_offset=q_offset,
+        scale=scale,
+        tile_q=tile_q,
+        tile_k=tile_k,
+        mode=mode,
+        interpret=interpret,
+    )

@@ -1,0 +1,130 @@
+"""Hypothesis compatibility layer for the property-test suites.
+
+``from repro.testing.hypcompat import given, settings, st`` resolves to the
+real `hypothesis <https://hypothesis.readthedocs.io>`_ package when it is
+installed (the declared test extra), and otherwise to a small deterministic
+fallback implementing the subset this repo's suites use:
+
+  ``@given(st.integers(...), st.floats(...), st.sampled_from(...))``
+  ``@settings(max_examples=N, deadline=None)``
+
+The fallback draws ``max_examples`` pseudo-random examples per test from a
+seed derived from the test's qualified name (stable across runs and
+machines — CPython seeds ``random.Random`` from a string via sha512), always
+including the strategy boundary values first.  It has no shrinking and no
+example database; it exists so the property suites still RUN as randomized
+round-trip checks on hosts where hypothesis cannot be installed, rather
+than being skipped wholesale.
+"""
+
+from __future__ import annotations
+
+try:  # the real thing, when available
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """One drawable value source; ``boundaries`` are emitted first."""
+
+        def __init__(self, draw, boundaries=()):
+            self._draw = draw
+            self.boundaries = tuple(boundaries)
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2**63) if min_value is None else min_value
+            hi = 2**63 - 1 if max_value is None else max_value
+            return _Strategy(
+                lambda rng: rng.randint(lo, hi),
+                boundaries=(lo, hi, 0) if lo <= 0 <= hi else (lo, hi),
+            )
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **_kw):
+            lo = 0.0 if min_value is None else float(min_value)
+            hi = 1.0 if max_value is None else float(max_value)
+            return _Strategy(
+                lambda rng: rng.uniform(lo, hi), boundaries=(lo, hi)
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            if not seq:
+                raise ValueError("sampled_from requires a non-empty sequence")
+            # every element is a boundary: small pools get full coverage
+            return _Strategy(lambda rng: rng.choice(seq), boundaries=seq)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(
+                lambda rng: bool(rng.getrandbits(1)), boundaries=(False, True)
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Record the example budget; deadline/database knobs are no-ops."""
+
+        def apply(func):
+            func._hypcompat_max_examples = max_examples
+            return func
+
+        return apply
+
+    def given(*strategies):
+        """Run the test once per drawn example tuple, boundaries first."""
+
+        def decorate(func):
+            n_strats = len(strategies)
+
+            @functools.wraps(func)
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(
+                    wrapper, "_hypcompat_max_examples", _DEFAULT_MAX_EXAMPLES
+                )
+                seed = f"{func.__module__}.{func.__qualname__}"
+                rng = random.Random(seed)
+                # boundary sweep: i-th example takes each strategy's i-th
+                # boundary (cycling), so min/max/every-pool-element appear
+                n_boundary = min(
+                    max(len(s.boundaries) for s in strategies), max_examples
+                )
+                for i in range(max_examples):
+                    if i < n_boundary:
+                        drawn = tuple(
+                            s.boundaries[i % len(s.boundaries)]
+                            for s in strategies
+                        )
+                    else:
+                        drawn = tuple(s.example(rng) for s in strategies)
+                    try:
+                        func(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{max_examples}) "
+                            f"for {func.__qualname__}: args={drawn!r}"
+                        ) from e
+
+            # hide the strategy-bound parameters from pytest's fixture
+            # resolution: expose only the leading (self / fixture) params
+            params = list(inspect.signature(func).parameters.values())
+            wrapper.__signature__ = inspect.Signature(params[: -n_strats or None])
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate

@@ -1,0 +1,111 @@
+"""The compat shim must resolve every drifted symbol on the pinned JAX."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestVersionFloor:
+    def test_running_jax_meets_floor(self):
+        assert compat.jax_version() >= compat.MIN_JAX_VERSION
+
+    def test_jax_version_parses_dev_suffixes(self):
+        # the parser must not choke on '0.5.0.dev20250101'-style strings
+        assert isinstance(compat.jax_version(), tuple)
+        assert all(isinstance(p, int) for p in compat.jax_version())
+
+    def test_require_min_jax_raises_with_explicit_floor(self):
+        with pytest.raises(RuntimeError, match=r"requires JAX >= 99\.0\.0"):
+            compat.require_min_jax("testing", (99, 0, 0))
+
+
+class TestCompilerParams:
+    def test_resolves_on_pinned_jax(self):
+        params = compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+        assert params.dimension_semantics == ("parallel", "arbitrary")
+
+    def test_matches_a_pallas_tpu_class(self):
+        from jax.experimental.pallas import tpu as pltpu
+
+        cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams"
+        )
+        assert isinstance(compat.tpu_compiler_params(), cls)
+
+
+class TestAbstractMesh:
+    def test_none_outside_any_mesh_context(self):
+        assert compat.get_abstract_mesh() is None
+
+    def test_ambient_mesh_is_discovered(self):
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        with mesh:
+            found = compat.get_abstract_mesh()
+        assert found is not None
+        assert "data" in found.axis_names
+
+    def test_constrain_is_noop_without_mesh(self):
+        from repro.distributed import sharding as sh
+
+        x = jnp.ones((4, 8))
+        rules = sh.ShardingRules()
+        out = sh.constrain(x, rules, (sh.BATCH, None))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+    def test_constrain_inside_jit_under_ambient_mesh(self):
+        from repro.distributed import sharding as sh
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        rules = sh.ShardingRules()
+
+        @jax.jit
+        def f(x):
+            return sh.constrain(x, rules, (sh.BATCH, None)) * 2.0
+
+        with mesh:
+            out = f(jnp.ones((4, 8)))
+        np.testing.assert_array_equal(np.asarray(out), np.full((4, 8), 2.0))
+
+
+class TestShardMap:
+    def test_check_vma_kwarg_translates(self):
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+        f = compat.shard_map(
+            lambda x: x * 2.0,
+            mesh=mesh,
+            in_specs=P("data"),
+            out_specs=P("data"),
+            check_vma=False,
+        )
+        out = f(jnp.ones((1, 4)))
+        np.testing.assert_array_equal(np.asarray(out), np.full((1, 4), 2.0))
+
+
+class TestCostAnalysis:
+    def test_returns_flat_dict(self):
+        compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+        cost = compat.cost_analysis_dict(compiled)
+        assert isinstance(cost, dict)
+        assert float(cost.get("flops", 0.0)) > 0
+
+    def test_tolerates_objects_without_cost_analysis(self):
+        class Broken:
+            def cost_analysis(self):
+                raise RuntimeError("unsupported backend")
+
+        assert compat.cost_analysis_dict(Broken()) == {}
+
+
+class TestBackendDetection:
+    def test_cpu_host_reports_interpret_default(self):
+        assert compat.default_backend() == "cpu"
+        assert not compat.is_tpu_backend()
+        assert compat.interpret_default()

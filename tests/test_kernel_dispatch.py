@@ -1,0 +1,177 @@
+"""All five kernel families through the dispatch layer, × {interpret, ref},
+against their ref.py oracles — the acceptance gate for the substrate."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bstc
+from repro.kernels import dispatch
+from repro.kernels.bgpp_score import bgpp_score_round
+from repro.kernels.bgpp_score.ref import bgpp_score_round_ref
+from repro.kernels.brcr_gemm import brcr_gemm, prepare_brcr_operands
+from repro.kernels.brcr_gemm.ref import dense_ref
+from repro.kernels.bstc_decode import (
+    bstc_decode_patterns,
+    prepare_encoded_plane,
+)
+from repro.kernels.bstc_matmul import (
+    bstc_matmul,
+    prepare_bstc_matmul_operands,
+)
+from repro.kernels.bstc_matmul.ref import bstc_matmul_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+MODES = ("interpret", "ref")
+
+
+def pack8(bits: np.ndarray) -> np.ndarray:
+    from repro.core.bitslice import pack_bits
+
+    return np.asarray(pack_bits(jnp.asarray(bits)))
+
+
+class TestModeResolution:
+    def test_explicit_mode_wins(self):
+        assert dispatch.resolve_mode("ref", interpret=True) == "ref"
+
+    def test_legacy_interpret_flag_maps_to_interpret(self):
+        assert dispatch.resolve_mode(None, interpret=True) == "interpret"
+
+    def test_default_mode_override(self):
+        with dispatch.dispatch_mode("ref"):
+            assert dispatch.resolve_mode() == "ref"
+
+    def test_env_var_override(self, monkeypatch):
+        prev = dispatch.get_default_mode()
+        dispatch.set_default_mode(None)
+        try:
+            monkeypatch.setenv(dispatch.ENV_VAR, "ref")
+            assert dispatch.resolve_mode() == "ref"
+            monkeypatch.setenv(dispatch.ENV_VAR, "nonsense")
+            with pytest.raises(ValueError, match="nonsense"):
+                dispatch.resolve_mode()
+        finally:
+            dispatch.set_default_mode(prev)
+
+    def test_backend_detection_on_cpu(self, monkeypatch):
+        prev = dispatch.get_default_mode()
+        dispatch.set_default_mode(None)
+        try:
+            monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+            assert dispatch.resolve_mode() == "interpret"
+        finally:
+            dispatch.set_default_mode(prev)
+
+    def test_compiled_on_cpu_raises(self):
+        x = jnp.ones((1, 8, 2, 8), jnp.float32)
+        with pytest.raises(RuntimeError, match="compiled dispatch"):
+            flash_attention(x, x, x, mode="compiled")
+
+
+class TestBRCRDispatch:
+    @pytest.mark.parametrize("mode", MODES)
+    def test_matches_dense_oracle(self, mode, rng):
+        M, H, N = 16, 128, 8
+        w = np.round(np.clip(rng.normal(size=(M, H)) * 40, -127, 127)).astype(
+            np.int8
+        )
+        x = jnp.asarray(rng.integers(-50, 50, size=(H, N)), jnp.float32)
+        ops = prepare_brcr_operands(w, m=4)
+        y = brcr_gemm(ops, x, tile_m=M, tile_k=H, tile_n=N, mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray(dense_ref(jnp.asarray(w), x))
+        )
+
+
+class TestBSTCDecodeDispatch:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("density", [0.02, 0.3])
+    def test_matches_plane_oracle(self, mode, density, rng):
+        plane = (rng.random((16, 512)) < density).astype(np.uint8)
+        enc = bstc.encode_plane(plane, m=4)
+        ops = prepare_encoded_plane(enc)
+        patt = bstc_decode_patterns(ops, tile_g=4, mode=mode)
+        rows = np.asarray(bstc.expand_patterns(patt, m=4))
+        np.testing.assert_array_equal(rows, plane)
+
+
+class TestBSTCMatmulDispatch:
+    @pytest.mark.parametrize("mode", MODES)
+    def test_matches_dense_oracle(self, mode, rng):
+        M, H, N = 16, 512, 8
+        w = np.round(np.clip(rng.normal(size=(M, H)) * 30, -127, 127)).astype(
+            np.int8
+        )
+        scale = rng.uniform(0.5, 2.0, size=(M,)).astype(np.float32)
+        x = jnp.asarray(rng.normal(size=(H, N)), jnp.float32)
+        ops = prepare_bstc_matmul_operands(w, scale=scale, m=4)
+        y = bstc_matmul(
+            ops, x, tile_m=M, tile_n=N, apply_scale=True, mode=mode
+        )
+        want = bstc_matmul_ref(jnp.asarray(w), x, jnp.asarray(scale))
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(want), rtol=1e-5, atol=1e-4
+        )
+
+
+class TestBGPPScoreDispatch:
+    @pytest.mark.parametrize("mode", MODES)
+    def test_matches_score_oracle(self, mode, rng):
+        S, D = 128, 64
+        q = jnp.asarray(rng.integers(-8, 8, size=(D,)), jnp.int32)
+        plane = (rng.random((S, D)) < 0.3).astype(np.uint8)
+        sign = (rng.random((S, D)) < 0.5).astype(np.uint8)
+        alive = jnp.asarray(rng.random(S) < 0.8)
+        got = bgpp_score_round(
+            q,
+            jnp.asarray(pack8(plane)),
+            jnp.asarray(pack8(sign)),
+            alive,
+            tile_s=64,
+            mode=mode,
+        )
+        want = bgpp_score_round_ref(
+            q, jnp.asarray(plane), jnp.asarray(sign), alive
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFlashAttentionDispatch:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("mask_kind", ["causal", "sliding", "full"])
+    def test_matches_attend_oracle(self, mode, mask_kind, rng):
+        B, S, Hq, Hk, D = 1, 64, 4, 2, 16
+        window = 16 if mask_kind == "sliding" else 0
+        q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Hk, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Hk, D)), jnp.float32)
+        got = flash_attention(
+            q, k, v, mask_kind=mask_kind, window=window,
+            tile_q=32, tile_k=32, mode=mode,
+        )
+        want = flash_attention_ref(q, k, v, mask_kind=mask_kind, window=window)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5
+        )
+
+
+class TestAutouseDispatchFixture:
+    def test_default_mode_is_interpret_on_cpu_ci(self):
+        """The conftest autouse fixture pins interpret mode on TPU-less
+        hosts (unless REPRO_KERNEL_DISPATCH overrides it)."""
+        if os.environ.get(dispatch.ENV_VAR):
+            pytest.skip("explicit env override active")
+        assert dispatch.resolve_mode() == "interpret"
+
+    def test_kernel_call_without_interpret_flag_runs(self, rng):
+        """Call sites that never pass interpret= must work on CPU now."""
+        x = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.float32)
+        out = flash_attention(x, x, x, tile_q=16, tile_k=16)
+        assert out.shape == x.shape

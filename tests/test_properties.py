@@ -4,12 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing.hypcompat import given, settings, st
 
 from repro.analysis.roofline import bgpp_kernel_traffic
 from repro.configs.base import ModelConfig
-from repro.core import attention
+from repro.core import attention, bstc
 from repro.models import moe
 
 jax.config.update("jax_platform_name", "cpu")
@@ -140,3 +139,70 @@ class TestBGPPKernelTrafficModel:
             for k in (0.125, 0.25, 0.5, 0.9)
         ]
         assert r[0] > r[1] > r[2] > r[3]
+
+
+class TestDispatchRoundTripLaws:
+    """Round-trip laws for the compat-routed kernel dispatch paths.
+
+    Small shapes + few examples keep these inside the tier-1 budget; the
+    exhaustive tiling sweeps live in tests/test_kernel_*.py and
+    tests/test_kernel_dispatch.py.
+    """
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([0.05, 0.3, 0.8]))
+    @settings(max_examples=6, deadline=None)
+    def test_bstc_encode_decode_identity(self, seed, density):
+        """BSTC encode -> dispatch-routed decode is the identity on group
+        patterns, in both interpret and ref modes."""
+        from repro.kernels.bstc_decode import (
+            bstc_decode_patterns, prepare_encoded_plane,
+        )
+
+        rng = np.random.default_rng(seed)
+        plane = (rng.random((8, 512)) < density).astype(np.uint8)
+        enc = bstc.encode_plane(plane, m=4)
+        ops = prepare_encoded_plane(enc)
+        want = np.asarray(bstc.decode_plane(enc))
+        for mode in ("interpret", "ref"):
+            patt = bstc_decode_patterns(ops, tile_g=4, mode=mode)
+            rows = np.asarray(bstc.expand_patterns(patt, m=4))
+            np.testing.assert_array_equal(rows, want, err_msg=f"mode={mode}")
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+    @settings(max_examples=6, deadline=None)
+    def test_brcr_factorization_matches_dense_gemm(self, seed, m):
+        """BRCR's enumeration factorization == dense GEMM, exactly, on int
+        inputs — through the dispatch layer in interpret and ref modes."""
+        from repro.kernels.brcr_gemm import brcr_gemm, prepare_brcr_operands
+
+        rng = np.random.default_rng(seed)
+        M, H, N = 16, 128, 8
+        w = np.round(np.clip(rng.normal(size=(M, H)) * 40, -127, 127)).astype(
+            np.int8
+        )
+        x = jnp.asarray(rng.integers(-100, 100, size=(H, N)), jnp.float32)
+        ops = prepare_brcr_operands(w, m=m)
+        ref = np.asarray(w, np.int64) @ np.asarray(x, np.int64)
+        for mode in ("interpret", "ref"):
+            y = brcr_gemm(
+                ops, x, tile_m=M, tile_k=H, tile_n=N, mode=mode
+            )
+            np.testing.assert_array_equal(
+                np.asarray(y, np.int64), ref, err_msg=f"mode={mode}"
+            )
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=4, deadline=None)
+    def test_bstc_matmul_weight_reconstruction_roundtrip(self, seed):
+        """prepare -> reconstruct_dense_weight is the identity on int8
+        weights (the ref dispatch path's premise)."""
+        from repro.kernels.bstc_matmul import prepare_bstc_matmul_operands
+        from repro.kernels.bstc_matmul.ops import reconstruct_dense_weight
+
+        rng = np.random.default_rng(seed)
+        w = np.round(
+            np.clip(rng.normal(size=(8, 512)) * 30, -127, 127)
+        ).astype(np.int8)
+        ops = prepare_bstc_matmul_operands(w, m=4)
+        got = np.asarray(reconstruct_dense_weight(ops))
+        np.testing.assert_array_equal(got, w.astype(np.int32))
