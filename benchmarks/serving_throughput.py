@@ -1,0 +1,174 @@
+"""Serving throughput: continuous batching vs. lockstep under a Poisson-ish
+arrival trace, for the three KV formats (bf16 / int8 / bgpp).
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py \\
+        [--arch phi4-mini-3.8b] [--slots 2] [--requests 6] [--seed 0] \\
+        [--kv-formats bf16,int8,bgpp] [--out BENCH_serving.json]
+
+Both runtimes drive the SAME jitted serve_step and the same seeded request
+trace (staggered arrivals, varying prompt lengths and decode budgets):
+
+  continuous — the slot scheduler: per-slot admission the moment a slot
+               frees up, one batched step for all live slots, immediate
+               eviction (``repro.serving.scheduler``).
+  lockstep   — the pre-ISSUE-2 baseline: groups of ``slots`` requests are
+               padded to a common length, prefilled together, and decoded
+               until the LONGEST budget in the group finishes; late
+               arrivals wait for the whole group.
+
+Reported per (format, runtime): tokens/s (useful tokens only), mean slot
+occupancy over busy steps, and per-request queue waits.  Runs on CPU via
+interpret-mode kernel dispatch (auto-detected off-TPU).  CSV on stdout per
+the benchmark contract; ``--out`` writes the JSON consumed as the
+BENCH_serving baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+try:  # python -m benchmarks.serving_throughput
+    from benchmarks.common import emit, emit_header
+except ImportError:  # python benchmarks/serving_throughput.py
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit, emit_header
+
+from repro.configs import ARCH_REGISTRY, get_config  # noqa: E402
+from repro.models import model_zoo  # noqa: E402
+from repro.serving import engine, kv_cache as kvc  # noqa: E402
+from repro.serving.request import poisson_trace  # noqa: E402
+from repro.serving.scheduler import Scheduler  # noqa: E402
+
+
+def run_continuous(params, cfg, layout, reqs):
+    sched = Scheduler(params, cfg, layout,
+                      prefill_kw=dict(block_q=16, block_k=32))
+    for r in reqs:
+        sched.submit(r)
+    t0 = time.perf_counter()
+    sched.run(max_steps=10_000)
+    wall = time.perf_counter() - t0
+    stats = sched.stats(wall)
+    return {
+        "tokens_per_s": stats["tokens_per_s"],
+        "mean_occupancy": stats["mean_occupancy"],
+        "decoded_tokens": stats["decoded_tokens"],
+        "wall_s": stats["wall_s"],
+        "mean_queue_wait_steps": float(np.mean(
+            [r["queue_wait_steps"] for r in stats["requests"]])),
+    }
+
+
+def run_lockstep(params, cfg, layout, reqs):
+    """Fixed-budget group decode (the old launch/serve.py skeleton): pad a
+    group to one width, prefill together, decode until the group's longest
+    budget; admission only at group boundaries."""
+    serve_step = jax.jit(engine.make_serve_step(cfg, layout))
+    slots = layout.batch
+    queue = list(reqs)
+    step_now = 0
+    occupancy, decoded, waits = [], 0, []
+    t0 = time.perf_counter()
+    while queue:
+        arrived = [r for r in queue if r.arrival_step <= step_now]
+        if not arrived:  # idle until the next arrival (no device work)
+            step_now = min(r.arrival_step for r in queue)
+            continue
+        group = arrived[:slots]
+        queue = [r for r in queue if r not in group]
+        waits.extend(step_now - r.arrival_step for r in group)
+        width = max(r.prompt_len for r in group)
+        prompts = jnp.stack([
+            jnp.pad(jnp.asarray(r.prompt), (width - r.prompt_len, 0))
+            for r in group
+        ])
+        if len(group) < slots:
+            prompts = jnp.pad(prompts, ((0, slots - len(group)), (0, 0)))
+        logits, cache = engine.prefill(params, cfg, layout, prompts,
+                                       block_q=16, block_k=32)
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        # prefill samples token 1; the group decodes until its longest
+        # budget even though shorter requests finished — the lockstep waste
+        T = max(r.max_new_tokens for r in group) - 1
+        T = min(T, layout.max_seq - width)
+        for t in range(T):
+            live = sum(1 for r in group if t < r.max_new_tokens - 1)
+            occupancy.append(live / slots)
+            decoded += live
+            logits, cache = serve_step(params, cache, cur)
+            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        step_now += T
+    wall = time.perf_counter() - t0
+    return {
+        "tokens_per_s": round(decoded / wall, 2) if wall > 0 else None,
+        "mean_occupancy": float(np.mean(occupancy)) if occupancy else 0.0,
+        "decoded_tokens": decoded,
+        "wall_s": round(wall, 3),
+        "mean_queue_wait_steps": float(np.mean(waits)) if waits else 0.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="phi4-mini-3.8b",
+                    choices=sorted(ARCH_REGISTRY))
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-formats", default="bf16,int8,bgpp")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON baseline (e.g. BENCH_serving.json)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+
+    results = {"config": vars(args) | {"arch_resolved": cfg.name}}
+    emit_header()
+    for fmt in args.kv_formats.split(","):
+        layout = kvc.layout_for(cfg, args.slots, args.max_seq, kv_format=fmt)
+        entry = {}
+        for runtime, fn in (("continuous", run_continuous),
+                            ("lockstep", run_lockstep)):
+            rng = np.random.default_rng(args.seed)  # identical trace
+            reqs = poisson_trace(rng, args.requests, cfg.vocab_size,
+                                 args.max_new, arrival_rate=3.0,
+                                 min_new=max(2, args.max_new // 3),
+                                 max_prompt=min(23, args.max_seq - 2))
+            entry[runtime] = fn(params, cfg, layout, reqs)
+            r = entry[runtime]
+            us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
+            emit(f"serving_{fmt}_{runtime}", us,
+                 f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}")
+        gain = entry["continuous"]["mean_occupancy"] - \
+            entry["lockstep"]["mean_occupancy"]
+        entry["occupancy_gain"] = round(gain, 4)
+        results[fmt] = entry
+        print(f"# {fmt}: continuous occupancy "
+              f"{entry['continuous']['mean_occupancy']:.3f} vs lockstep "
+              f"{entry['lockstep']['mean_occupancy']:.3f} "
+              f"({'+' if gain > 0 else ''}{gain:.3f})")
+
+    ok = all(results[f]["occupancy_gain"] > 0
+             for f in args.kv_formats.split(","))
+    print(f"# continuous > lockstep occupancy on every format: {ok}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# baseline -> {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

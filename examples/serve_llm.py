@@ -1,12 +1,14 @@
-"""End-to-end serving driver: batched requests through prefill + decode
-with the MCBP stack (int8 or bit-planar BGPP KV cache).
+"""End-to-end serving demo: batched requests through the continuous-batching
+scheduler (per-slot prefill + decode with int8 or bit-planar BGPP KV cache).
 
     PYTHONPATH=src python examples/serve_llm.py [--arch phi4-mini-3.8b]
         [--kv-format int8|bf16|bgpp] [--steps 24] [--batch 4]
 
-Uses the smoke-sized config of the chosen architecture (CPU container);
-the identical engine code path is what the decode_32k / long_500k dry-run
-cells lower for the production meshes.
+Each request is admitted into its own slot of ONE live cache
+(``engine.prefill_into_slot``) and all slots decode together in a single
+batched serve_step per token — the identical engine code path the
+decode_32k / long_500k dry-run cells lower for the production meshes.
+Uses the smoke-sized config of the chosen architecture (CPU container).
 """
 
 import argparse
@@ -15,11 +17,12 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_REGISTRY, get_config
 from repro.models import model_zoo
-from repro.serving import engine, kv_cache as kvc
+from repro.serving import kv_cache as kvc
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -41,38 +44,39 @@ def main():
     params, _ = model_zoo.init(jax.random.key(0), cfg)
     max_seq = args.prompt_len + args.steps + 8
 
-    # batched "requests": random prompts (no tokenizer in the container)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
-    )
-
     layout = kvc.layout_for(cfg, args.batch, max_seq, kv_format=args.kv_format)
+    sched = Scheduler(params, cfg, layout,
+                      prefill_kw=dict(block_q=16, block_k=32))
+
+    # batched "requests": random prompts of varying length (no tokenizer in
+    # the container); +1 because admission itself samples the first token
     t0 = time.perf_counter()
-    last_logits, cache = engine.prefill(
-        params, cfg, layout, prompts, block_q=16, block_k=32
-    )
-    jax.block_until_ready(last_logits)
+    for rid in range(args.batch):
+        plen = max(4, args.prompt_len - 3 * rid)
+        sched.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            max_new_tokens=args.steps + 1,
+        ))
+    sched.admit()
+    jax.block_until_ready(sched.cache["pos"])
     t_prefill = time.perf_counter() - t0
     print(f"[serve] arch={cfg.name} kv={args.kv_format} "
-          f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms")
-    print(f"[serve] cache: {kvc.cache_bytes(cache)/1e6:.2f} MB "
-          f"({len(layout.global_layers)} global / {len(layout.local_layers)} local layers)")
+          f"prefill {args.batch} slots (longest {args.prompt_len}) "
+          f"in {t_prefill*1e3:.1f} ms")
+    print(f"[serve] cache: {kvc.cache_bytes(sched.cache)/1e6:.2f} MB "
+          f"({len(layout.global_layers)} global / "
+          f"{len(layout.local_layers)} local layers)")
 
-    serve_step = jax.jit(engine.make_serve_step(cfg, layout))
-    cur = jnp.argmax(last_logits[:, -1], -1).astype(jnp.int32)[:, None]
-    out_tokens = [cur]
     t0 = time.perf_counter()
-    for _ in range(args.steps):
-        logits, cache = serve_step(params, cache, cur)
-        cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        out_tokens.append(cur)
-    jax.block_until_ready(cur)
+    sched.run(max_steps=args.steps)
     dt = time.perf_counter() - t0
-    toks = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    done = sched.finished + [s.request for s in sched.slots if s.request]
     print(f"[serve] decoded {args.steps} steps x {args.batch} seqs in "
-          f"{dt*1e3:.1f} ms ({args.steps*args.batch/dt:.1f} tok/s on CPU smoke)")
-    for b in range(min(args.batch, 2)):
-        print(f"[serve] seq{b}: {toks[b][:16].tolist()}...")
+          f"{dt*1e3:.1f} ms ({sched.decoded_tokens/dt:.1f} tok/s on CPU "
+          f"smoke, occupancy {np.mean(sched.occupancy):.2f})")
+    for req in sorted(done, key=lambda r: r.rid)[:2]:
+        print(f"[serve] seq{req.rid}: {req.generated[:16]}...")
 
 
 if __name__ == "__main__":

@@ -1,30 +1,36 @@
-"""Production serving launcher: continuous-batching decode over the MCBP
-engine (prefill + serve_step with int8 / bgpp KV caches).
+"""Production serving launcher: slot-level continuous batching over the MCBP
+engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \\
-        --kv-format int8 --requests 8 --max-new 32 [--data 1 --model 1]
+        --kv-format int8 --requests 8 --slots 4 --seed 0 \\
+        [--trace-out trace.json] [--data 1 --model 1]
 
-Requests arrive with distinct prompt lengths and are decoded together; a
-finished slot (here: a fixed budget per request) is immediately refilled —
-the scheduling skeleton of a production server on the same serve_step the
-decode_32k / long_500k dry-run cells lower.
+Requests arrive on a Poisson-ish trace with distinct prompt lengths and
+decode budgets; the scheduler admits each into the first EMPTY slot via
+``prefill_into_slot`` (one B=1 forward, KV written into a single batch row
+of the live cache), decodes every live slot in ONE batched serve_step, and
+evicts finished slots immediately — no lockstep barriers.  ``--trace-out``
+dumps per-request latency/queue-wait and aggregate throughput as JSON so
+runs are reproducible (``--seed``) and comparable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_REGISTRY, get_config
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_debug_mesh
 from repro.models import model_zoo
-from repro.serving import engine, kv_cache as kvc
+from repro.serving import kv_cache as kvc
+from repro.serving.request import poisson_trace
+from repro.serving.scheduler import Scheduler
 
 
 def main():
@@ -37,6 +43,12 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean inter-arrival gap in decode steps")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="request-trace RNG seed (reproducible runs)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request latency/throughput JSON here")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     args = ap.parse_args()
@@ -47,47 +59,46 @@ def main():
                          "families; ssm/hybrid/enc-dec decode in tests/")
     mesh = make_debug_mesh(args.data, args.model)
     rules = sh.rules_for_mesh(mesh)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     params, _ = model_zoo.init(jax.random.key(0), cfg)
 
-    # request queue: random prompts of varying length
-    queue = [
-        jnp.asarray(rng.integers(0, cfg.vocab_size, (int(n),)), jnp.int32)
-        for n in rng.integers(8, 24, size=args.requests)
-    ]
     layout = kvc.layout_for(cfg, args.slots, args.max_seq,
                             kv_format=args.kv_format)
-    serve_step = jax.jit(engine.make_serve_step(cfg, layout, rules))
+    sched = Scheduler(params, cfg, layout, rules,
+                      prefill_kw=dict(block_q=16, block_k=32))
+    for req in poisson_trace(rng, args.requests, cfg.vocab_size,
+                             args.max_new, args.arrival_rate,
+                             max_prompt=min(23, args.max_seq - 2)):
+        sched.submit(req)
 
-    done = 0
     t0 = time.perf_counter()
-    decoded_tokens = 0
-    while queue:
-        # fill a batch of slots (continuous batching: pad to common length,
-        # prefill together; production would use per-slot paged prefill)
-        batch = [queue.pop(0) for _ in range(min(args.slots, len(queue)))]
-        width = max(len(p) for p in batch)
-        prompts = jnp.stack([
-            jnp.pad(p, (width - len(p), 0), constant_values=0) for p in batch
-        ])
-        if len(batch) < args.slots:
-            prompts = jnp.pad(prompts, ((0, args.slots - len(batch)), (0, 0)))
-        with mesh:
-            logits, cache = engine.prefill(
-                params, cfg, layout, prompts, rules, block_q=16, block_k=32
-            )
-            cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-            for _ in range(args.max_new):
-                logits, cache = serve_step(params, cache, cur)
-                cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-                decoded_tokens += len(batch)
-        done += len(batch)
-        print(f"[serve] {done}/{args.requests} requests "
-              f"({decoded_tokens} tokens)")
+    done = 0
+    with mesh:
+        while sched.num_pending:
+            sched.step()
+            if len(sched.finished) != done:
+                done = len(sched.finished)
+                print(f"[serve] {done}/{args.requests} requests "
+                      f"({sched.decoded_tokens} tokens, "
+                      f"step {sched.step_count})")
     dt = time.perf_counter() - t0
-    print(f"[serve] arch={cfg.name} kv={args.kv_format}: {done} requests, "
-          f"{decoded_tokens} tokens in {dt:.1f}s "
-          f"({decoded_tokens/dt:.1f} tok/s CPU smoke)")
+
+    stats = sched.stats(dt)
+    print(f"[serve] arch={cfg.name} kv={args.kv_format}: "
+          f"{stats['finished_requests']} requests, "
+          f"{stats['decoded_tokens']} tokens in {dt:.1f}s "
+          f"({stats['tokens_per_s']:.1f} tok/s CPU smoke, "
+          f"mean occupancy {stats['mean_occupancy']:.2f})")
+    if args.trace_out:
+        stats["config"] = {
+            "arch": cfg.name, "kv_format": args.kv_format,
+            "slots": args.slots, "max_seq": args.max_seq,
+            "requests": args.requests, "max_new": args.max_new,
+            "arrival_rate": args.arrival_rate, "seed": args.seed,
+        }
+        with open(args.trace_out, "w") as f:
+            json.dump(stats, f, indent=2)
+        print(f"[serve] trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,1 @@
-from repro.serving import engine, kv_cache  # noqa: F401
+from repro.serving import engine, kv_cache, request, scheduler  # noqa: F401

@@ -7,6 +7,12 @@ dry-run lowers for the decode_32k / long_500k cells:
 
     serve_step(params, cache, tokens (B,1)) -> (logits (B,1,V), cache')
 
+Positions are per slot: ``cache["pos"]`` is a ``(B,)`` vector, and every
+decode path (RoPE, ring-buffer slots, causal/window masks, BGPP round-0
+masking) indexes it per batch row, so staggered requests share one batch
+(continuous batching).  ``prefill`` builds a fresh whole-batch cache;
+``prefill_into_slot`` admits one prompt into a single slot of a live cache.
+
 Decode loops over layers in python (tiny per-layer op count; heterogeneous
 caches), indexing the stacked parameter pytrees with static layer ids.
 """
@@ -202,11 +208,16 @@ def _bgpp_decode_attend(q, entry, valid, cfg):
 
 
 def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules):
-    """x: (B, 1, D).  Returns (out (B,1,D), cache)."""
+    """x: (B, 1, D), pos: per-slot (B,) int32.  Returns (out (B,1,D), cache).
+
+    Every batch row carries its own position: RoPE angles, the KV write
+    target, and the causal/window valid mask are all computed per slot, so
+    requests admitted at different times decode together in one batch.
+    """
     B = x.shape[0]
     fmt = layout.kv_format
     h = layers.apply_norm(x, p["attn_norm"], cfg.norm) if "attn_norm" in p else x
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    positions = pos[:, None].astype(jnp.int32)  # (B, 1)
     use_rope = cfg.family != "hybrid"
     q, k, v = layers.qkv_project(
         p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
@@ -214,99 +225,32 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules):
     )
     kind, w = cfg.layer_attn_window(layer_idx)
     is_local = layer_idx in layout.local_layers
+    pos_c = pos[:, None]  # (B, 1) for masks against (B, S) position grids
 
     if is_local:
         li = layout.local_layers.index(layer_idx)
-        W = layout.local_window
-        slot = jnp.mod(pos, W)
-        store = cache["local"]
-        kq, ks = kvc.quantize_kv(k)
-        vq, vs = kvc.quantize_kv(v)
-        # heads-major writes: (B,1,Hk,D) -> (B,Hk,1,D)
-        kq_h = jnp.swapaxes(kq, 1, 2)
-        vq_h = jnp.swapaxes(vq, 1, 2)
-        if "k_scale" in store:
-            store["k"] = jax.lax.dynamic_update_slice(
-                store["k"], kq_h[None], (li, 0, 0, slot, 0))
-            store["v"] = jax.lax.dynamic_update_slice(
-                store["v"], vq_h[None], (li, 0, 0, slot, 0))
-            store["k_scale"] = jax.lax.dynamic_update_slice(
-                store["k_scale"], jnp.swapaxes(ks, 1, 2)[None], (li, 0, 0, slot))
-            store["v_scale"] = jax.lax.dynamic_update_slice(
-                store["v_scale"], jnp.swapaxes(vs, 1, 2)[None], (li, 0, 0, slot))
-        else:
-            store["k"] = jax.lax.dynamic_update_slice(
-                store["k"], jnp.swapaxes(k, 1, 2).astype(store["k"].dtype)[None],
-                (li, 0, 0, slot, 0))
-            store["v"] = jax.lax.dynamic_update_slice(
-                store["v"], jnp.swapaxes(v, 1, 2).astype(store["v"].dtype)[None],
-                (li, 0, 0, slot, 0))
-        store["abs_pos"] = jax.lax.dynamic_update_slice(
-            store["abs_pos"],
-            jnp.broadcast_to(pos, (1, B, 1)).astype(jnp.int32),
-            (li, 0, slot),
-        )
+        slot = jnp.mod(pos, layout.local_window)  # (B,) per-slot ring index
+        store = kvc.write_token(cache["local"], li, k, v, slot)
+        store["abs_pos"] = store["abs_pos"].at[li, jnp.arange(B), slot].set(pos)
         cache["local"] = store
         abs_pos = store["abs_pos"][li]  # (B, W)
         if kind == "chunked":
-            valid = (abs_pos >= 0) & (abs_pos // w == pos // w) & (abs_pos <= pos)
+            valid = (abs_pos >= 0) & (abs_pos // w == pos_c // w) & (abs_pos <= pos_c)
         else:
-            valid = (abs_pos >= 0) & (pos - abs_pos < w)
+            valid = (abs_pos >= 0) & (pos_c - abs_pos < w) & (abs_pos <= pos_c)
         entry = {n: store[n][li] for n in store if n != "abs_pos"}
         fmt_l = "int8" if "k_scale" in store else "bf16"
         out = _decode_attend(q[:, 0], entry, valid, cfg, fmt_l)
     else:
         gi = layout.global_layers.index(layer_idx)
+        cache["global"] = kvc.write_token(cache["global"], gi, k, v, pos)
         store = cache["global"]
+        valid = jnp.arange(layout.max_seq)[None, :] <= pos_c  # (B, S)
+        entry = {n: store[n][gi] for n in store}
         if fmt == "bgpp":
-            kq, ks = kvc.quantize_kv(k)
-            planes, sign = kvc.k_to_bitplanes(kq)  # (NBITS,B,1,Hk,D/8)
-            store["k_planes"] = jax.lax.dynamic_update_slice(
-                store["k_planes"], jnp.swapaxes(planes, 2, 3)[None],
-                (gi, 0, 0, 0, pos, 0))
-            store["k_sign"] = jax.lax.dynamic_update_slice(
-                store["k_sign"], jnp.swapaxes(sign, 1, 2)[None],
-                (gi, 0, 0, pos, 0))
-            store["k_scale"] = jax.lax.dynamic_update_slice(
-                store["k_scale"], jnp.swapaxes(ks, 1, 2)[None], (gi, 0, 0, pos))
-            vq, vs = kvc.quantize_kv(v)
-            store["v"] = jax.lax.dynamic_update_slice(
-                store["v"], jnp.swapaxes(vq, 1, 2)[None], (gi, 0, 0, pos, 0))
-            store["v_scale"] = jax.lax.dynamic_update_slice(
-                store["v_scale"], jnp.swapaxes(vs, 1, 2)[None], (gi, 0, 0, pos))
-            cache["global"] = store
-            valid = jnp.arange(layout.max_seq)[None, :] <= pos
-            valid = jnp.broadcast_to(valid, (B, layout.max_seq))
-            entry = {n: store[n][gi] for n in store}
             out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
-        elif fmt == "int8":
-            kq, ks = kvc.quantize_kv(k)
-            vq, vs = kvc.quantize_kv(v)
-            store["k"] = jax.lax.dynamic_update_slice(
-                store["k"], jnp.swapaxes(kq, 1, 2)[None], (gi, 0, 0, pos, 0))
-            store["v"] = jax.lax.dynamic_update_slice(
-                store["v"], jnp.swapaxes(vq, 1, 2)[None], (gi, 0, 0, pos, 0))
-            store["k_scale"] = jax.lax.dynamic_update_slice(
-                store["k_scale"], jnp.swapaxes(ks, 1, 2)[None], (gi, 0, 0, pos))
-            store["v_scale"] = jax.lax.dynamic_update_slice(
-                store["v_scale"], jnp.swapaxes(vs, 1, 2)[None], (gi, 0, 0, pos))
-            cache["global"] = store
-            valid = jnp.arange(layout.max_seq)[None, :] <= pos
-            valid = jnp.broadcast_to(valid, (B, layout.max_seq))
-            entry = {n: store[n][gi] for n in store}
-            out = _decode_attend(q[:, 0], entry, valid, cfg, "int8")
         else:
-            store["k"] = jax.lax.dynamic_update_slice(
-                store["k"], jnp.swapaxes(k, 1, 2).astype(store["k"].dtype)[None],
-                (gi, 0, 0, pos, 0))
-            store["v"] = jax.lax.dynamic_update_slice(
-                store["v"], jnp.swapaxes(v, 1, 2).astype(store["v"].dtype)[None],
-                (gi, 0, 0, pos, 0))
-            cache["global"] = store
-            valid = jnp.arange(layout.max_seq)[None, :] <= pos
-            valid = jnp.broadcast_to(valid, (B, layout.max_seq))
-            entry = {n: store[n][gi] for n in store}
-            out = _decode_attend(q[:, 0], entry, valid, cfg, "bf16")
+            out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
 
     out = out.reshape(B, 1, -1) @ p["attn"]["wo"]
     if cfg.post_norms and "post_attn_norm" in p:
@@ -317,7 +261,15 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules):
 def _ffn_decode_layer(p, cfg, x, rules=None):
     h = layers.apply_norm(x, p["mlp_norm"] if "mlp_norm" in p else p["norm2"], cfg.norm)
     if "moe" in p:
-        out, _ = moe.moe_apply(p["moe"], h, cfg, rules=rules)
+        # dropless routing at decode: GShard capacity is pooled across the
+        # batch dim, so capacity drops would couple co-scheduled slots — a
+        # slot's logits must never depend on its batch neighbors (the
+        # continuous-batching isolation invariant).  capacity_factor=E
+        # clamps capacity to Tg*k exactly, and at S=1 the buffer is tiny.
+        out, _ = moe.moe_apply(
+            p["moe"], h, cfg, capacity_factor=float(cfg.num_experts),
+            rules=rules,
+        )
     else:
         out = layers.mlp_apply(p["mlp"], h, cfg.activation)
     if cfg.post_norms and "post_mlp_norm" in p:
@@ -347,15 +299,15 @@ def _mamba_decode_layer(p, cfg, layout, cache, x, layer_idx, rules=None):
 
 
 def _sinusoid_at(pos, dim: int) -> jax.Array:
-    """Single-position sinusoidal embedding (avoids a (max_seq, D) constant)."""
-    half = dim // 2
+    """Per-slot sinusoidal embedding: (B,) positions -> (B, dim) (avoids a
+    (max_seq, D) constant)."""
     div = jnp.exp(
         jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim)
     )
-    ang = pos.astype(jnp.float32) * div
-    out = jnp.zeros((dim,), jnp.float32)
-    out = out.at[0::2].set(jnp.sin(ang))
-    return out.at[1::2].set(jnp.cos(ang))
+    ang = pos.astype(jnp.float32)[:, None] * div  # (B, dim/2)
+    out = jnp.zeros(pos.shape + (dim,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    return out.at[..., 1::2].set(jnp.cos(ang))
 
 
 # --------------------------------------------------------------------------
@@ -368,7 +320,7 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     thetas = transformer.layer_thetas(cfg) if cfg.family != "ssm" else None
 
     def serve_step(params, cache, tokens):
-        pos = cache["pos"]
+        pos = cache["pos"]  # per-slot (B,) int32 positions
         B = tokens.shape[0]
         x = params["embed"][tokens[:, :1]].astype(dtype)
         if cfg.embed_scale:
@@ -407,7 +359,7 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
                     x = x + m
                 x = x + _ffn_decode_layer(p, cfg, x, rules)
         elif cfg.family == "enc_dec":
-            x = x + _sinusoid_at(pos, cfg.d_model).astype(dtype)[None, None]
+            x = x + _sinusoid_at(pos, cfg.d_model).astype(dtype)[:, None, :]
             for i in range(cfg.num_layers):
                 p = jax.tree.map(lambda a: a[i], params["decoder"])
                 pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
@@ -462,75 +414,61 @@ def prefill(params, cfg, layout: kvc.CacheLayout, tokens, rules=sh.ShardingRules
     )
     k_all, v_all = kvs  # (L, B, S, Hk, Dh)
     cache, _ = kvc.init_cache(cfg, layout)
-    S = tokens.shape[1]
-
-    def put_global(store, gi, k, v):
-        # stores are heads-major: (B, S, Hk, D) -> (B, Hk, S, D)
-        if "k_scale" in store:
-            kq, ks = kvc.quantize_kv(k)
-            vq, vs = kvc.quantize_kv(v)
-            store["k"] = store["k"].at[gi, :, :, :S].set(jnp.swapaxes(kq, 1, 2))
-            store["v"] = store["v"].at[gi, :, :, :S].set(jnp.swapaxes(vq, 1, 2))
-            store["k_scale"] = store["k_scale"].at[gi, :, :, :S].set(
-                jnp.swapaxes(ks, 1, 2))
-            store["v_scale"] = store["v_scale"].at[gi, :, :, :S].set(
-                jnp.swapaxes(vs, 1, 2))
-        else:
-            store["k"] = store["k"].at[gi, :, :, :S].set(
-                jnp.swapaxes(k, 1, 2).astype(store["k"].dtype))
-            store["v"] = store["v"].at[gi, :, :, :S].set(
-                jnp.swapaxes(v, 1, 2).astype(store["v"].dtype))
-        return store
+    B, S = tokens.shape
 
     for gi, layer in enumerate(layout.global_layers):
-        k, v = k_all[layer], v_all[layer]
-        if layout.kv_format == "bgpp":
-            store = cache["global"]
-            kq, ks = kvc.quantize_kv(k)
-            planes, sign = kvc.k_to_bitplanes(kq)  # (NBITS,B,S,Hk,D/8)
-            store["k_planes"] = store["k_planes"].at[gi, :, :, :, :S].set(
-                jnp.swapaxes(planes, 2, 3))
-            store["k_sign"] = store["k_sign"].at[gi, :, :, :S].set(
-                jnp.swapaxes(sign, 1, 2))
-            store["k_scale"] = store["k_scale"].at[gi, :, :, :S].set(
-                jnp.swapaxes(ks, 1, 2))
-            vq, vs = kvc.quantize_kv(v)
-            store["v"] = store["v"].at[gi, :, :, :S].set(jnp.swapaxes(vq, 1, 2))
-            store["v_scale"] = store["v_scale"].at[gi, :, :, :S].set(
-                jnp.swapaxes(vs, 1, 2))
-            cache["global"] = store
-        else:
-            cache["global"] = put_global(cache["global"], gi, k, v)
-
-    W = layout.local_window
-    for li, layer in enumerate(layout.local_layers):
-        # keep the last W positions in ring order (slot = pos % W)
-        k, v = k_all[layer], v_all[layer]
-        take = min(W, S)
-        pos_abs = jnp.arange(S - take, S)
-        slots = jnp.mod(pos_abs, W)
-        store = cache["local"]
-        # heads-major ring (Ll, B, Hk, W, D): .at[li, :, :, slots] yields
-        # (take, B, Hk, D) with the advanced dim in front — the (B, take,
-        # Hk, D) sources just swap their first two axes
-        if "k_scale" in store:
-            kq, ks = kvc.quantize_kv(k[:, -take:])
-            vq, vs = kvc.quantize_kv(v[:, -take:])
-            store["k"] = store["k"].at[li, :, :, slots].set(jnp.swapaxes(kq, 0, 1))
-            store["v"] = store["v"].at[li, :, :, slots].set(jnp.swapaxes(vq, 0, 1))
-            store["k_scale"] = store["k_scale"].at[li, :, :, slots].set(
-                jnp.swapaxes(ks, 0, 1))
-            store["v_scale"] = store["v_scale"].at[li, :, :, slots].set(
-                jnp.swapaxes(vs, 0, 1))
-        else:
-            store["k"] = store["k"].at[li, :, :, slots].set(
-                jnp.swapaxes(k[:, -take:].astype(store["k"].dtype), 0, 1))
-            store["v"] = store["v"].at[li, :, :, slots].set(
-                jnp.swapaxes(v[:, -take:].astype(store["v"].dtype), 0, 1))
-        store["abs_pos"] = store["abs_pos"].at[li, :, slots].set(
-            jnp.broadcast_to(pos_abs, (tokens.shape[0], take)).T
+        cache["global"] = kvc.write_prefill(
+            cache["global"], gi, k_all[layer], v_all[layer]
         )
-        cache["local"] = store
+    for li, layer in enumerate(layout.local_layers):
+        cache["local"] = kvc.write_prefill_local(
+            cache["local"], li, k_all[layer], v_all[layer], layout.local_window
+        )
 
-    cache["pos"] = jnp.asarray(S, jnp.int32)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    return logits[:, -1:], cache
+
+
+def prefill_into_slot(params, cfg, layout: kvc.CacheLayout, cache, slot: int,
+                      prompt, rules=sh.ShardingRules(), **fw_kw):
+    """Prefill ONE prompt into batch row ``slot`` of a *live* cache.
+
+    This is the admission path of the continuous-batching scheduler: the
+    forward pass runs at B=1, the slot is reset (stale KV, ring positions,
+    mamba state), and the prompt's quantized/bit-planed KV is written into
+    that single batch index without touching live neighbors.  Returns
+    ``(last_logits (1, 1, V), cache)`` — the logits sample the request's
+    first token.
+
+    prompt: (S,) or (1, S) int32 tokens, S < layout.max_seq (a prompt that
+    fills the cache leaves no index for the first decoded token's KV —
+    out-of-bounds scatters drop silently, corrupting logits).
+
+    Admission runs eagerly: reset + per-layer writes each copy the stacked
+    store, so a production-size cache wants this jitted with the cache
+    donated (needs prompt-length bucketing to bound recompiles — planned
+    alongside the paged cache).
+    """
+    assert cfg.family in ("dense", "moe", "vlm")
+    tokens = prompt[None] if prompt.ndim == 1 else prompt
+    assert tokens.shape[0] == 1, "one prompt per admission"
+    S = tokens.shape[1]
+    assert S < layout.max_seq, (
+        f"prompt len {S} needs at least one decode slot below max_seq "
+        f"{layout.max_seq}"
+    )
+    logits, _, (k_all, v_all) = transformer.forward(
+        params, cfg, tokens, rules, return_kv=True, **fw_kw
+    )
+    cache = kvc.reset_slot(cache, layout, slot)
+    for gi, layer in enumerate(layout.global_layers):
+        cache["global"] = kvc.write_prefill(
+            cache["global"], gi, k_all[layer], v_all[layer], slot=slot
+        )
+    for li, layer in enumerate(layout.local_layers):
+        cache["local"] = kvc.write_prefill_local(
+            cache["local"], li, k_all[layer], v_all[layer],
+            layout.local_window, slot=slot,
+        )
+    cache["pos"] = cache["pos"].at[slot].set(S)
     return logits[:, -1:], cache

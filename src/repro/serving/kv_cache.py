@@ -143,7 +143,7 @@ def _kv_stack_specs(kv_format):
 
 def cache_specs(cfg, layout: CacheLayout) -> Tree:
     """Logical-axis specs for the cache — pure (no allocation, dry-run path)."""
-    specs: Tree = {"pos": ()}
+    specs: Tree = {"pos": (sh.BATCH,)}
     if layout.global_layers:
         specs["global"] = _kv_stack_specs(layout.kv_format)
     if layout.local_layers:
@@ -166,7 +166,9 @@ def init_cache_arrays(cfg, layout: CacheLayout) -> Tree:
     """Cache pytree (zeros).  Safe under jax.eval_shape for the dry-run."""
     B, S = layout.batch, layout.max_seq
     dtype = _dt(cfg.dtype)
-    cache: Tree = {"pos": jnp.zeros((), jnp.int32)}
+    # per-slot decode positions: slot b of the batch holds its own sequence,
+    # so requests of different lengths can coexist (continuous batching)
+    cache: Tree = {"pos": jnp.zeros((B,), jnp.int32)}
     if layout.global_layers:
         cache["global"] = _kv_stack(
             len(layout.global_layers), B, S, cfg.num_kv_heads, cfg.head_dim,
@@ -223,7 +225,15 @@ def cache_bytes(cache: Tree) -> int:
 
 
 def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """(B, 1, Hk, Dh) -> int8 + per (B,1,Hk) scale."""
+    """Symmetric per-vector int8 quantization over the trailing head dim.
+
+    Rank-polymorphic contract: ``x`` is ``(..., Hk, Dh)`` — decode passes
+    single tokens ``(B, 1, Hk, Dh)``, prefill whole prompts
+    ``(B, S, Hk, Dh)``.  The scale is computed per leading index (one
+    absmax per ``(..., Hk)`` row), so both ranks share one code path.
+    Returns ``(int8 values (..., Hk, Dh), f32 scales (..., Hk))``.
+    """
+    assert x.ndim >= 2, f"quantize_kv wants (..., Hk, Dh), got {x.shape}"
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
     scale = jnp.maximum(absmax, 1e-8) / 127.0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
@@ -245,3 +255,175 @@ def bitplanes_to_k(planes: jax.Array, sign: jax.Array) -> jax.Array:
     """Inverse (used by the exact formal-compute stage) -> int32 values."""
     mag = bitslice.from_bitplanes(bitslice.unpack_bits(planes, axis=-1))
     return bitslice.from_sign_magnitude(bitslice.unpack_bits(sign, axis=-1), mag)
+
+
+# --------------------------------------------------------------------------
+# stack writes — the ONE code path for bf16 / int8 / bgpp stores
+# --------------------------------------------------------------------------
+#
+# The storage format is inferred from the store's keys (``k_planes`` => bgpp,
+# ``k_scale`` => int8, else bf16), so decode layers and both prefill paths
+# (whole-batch and single-slot admission) never branch on format themselves.
+
+
+def write_token(store: Tree, idx: int, k: jax.Array, v: jax.Array,
+                tpos: jax.Array) -> Tree:
+    """Write one decode token into layer ``idx`` of a KV stack, per slot.
+
+    k/v: fresh projections ``(B, 1, Hk, Dh)`` (seq-major).
+    tpos: ``(B,)`` int32 per-slot target index along the stack's seq axis —
+    the absolute position for global stacks, ``pos % window`` for local
+    ring buffers.  Every batch row scatters to its own index, which is what
+    lets staggered requests share one cache.
+    """
+    B = k.shape[0]
+    bidx = jnp.arange(B)
+    if "k_planes" in store:  # bgpp: bit-planed K magnitudes + int8 V
+        kq, ks = quantize_kv(k)
+        planes, sign = k_to_bitplanes(kq)  # (NBITS,B,1,Hk,D/8), (B,1,Hk,D/8)
+        store["k_planes"] = store["k_planes"].at[idx, :, bidx, :, tpos].set(
+            jnp.moveaxis(planes[:, :, 0], 0, 1))  # (B,NBITS,Hk,D/8)
+        store["k_sign"] = store["k_sign"].at[idx, bidx, :, tpos].set(sign[:, 0])
+        store["k_scale"] = store["k_scale"].at[idx, bidx, :, tpos].set(ks[:, 0])
+        vq, vs = quantize_kv(v)
+        store["v"] = store["v"].at[idx, bidx, :, tpos].set(vq[:, 0])
+        store["v_scale"] = store["v_scale"].at[idx, bidx, :, tpos].set(vs[:, 0])
+    elif "k_scale" in store:  # int8
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        store["k"] = store["k"].at[idx, bidx, :, tpos].set(kq[:, 0])
+        store["v"] = store["v"].at[idx, bidx, :, tpos].set(vq[:, 0])
+        store["k_scale"] = store["k_scale"].at[idx, bidx, :, tpos].set(ks[:, 0])
+        store["v_scale"] = store["v_scale"].at[idx, bidx, :, tpos].set(vs[:, 0])
+    else:  # bf16
+        store["k"] = store["k"].at[idx, bidx, :, tpos].set(
+            k[:, 0].astype(store["k"].dtype))
+        store["v"] = store["v"].at[idx, bidx, :, tpos].set(
+            v[:, 0].astype(store["v"].dtype))
+    return store
+
+
+def write_prefill(store: Tree, idx: int, k: jax.Array, v: jax.Array,
+                  *, slot: Optional[int] = None) -> Tree:
+    """Write a whole prompt's K/V into positions ``[0, S)`` of a global stack.
+
+    k/v: ``(B, S, Hk, Dh)``.  ``slot=None`` writes every batch row (fresh
+    whole-batch prefill); ``slot=b`` writes row ``b`` only — admission of one
+    prompt (``B == 1``) into a single slot of a *live* cache.
+    """
+    S = k.shape[1]
+    if slot is None:
+        bsel: Any = slice(None)
+        tr = lambda a: jnp.swapaxes(a, 1, 2)  # (B,S,Hk,...) -> (B,Hk,S,...)
+    else:
+        assert k.shape[0] == 1, "slot admission writes one prompt at a time"
+        bsel = slot
+        tr = lambda a: jnp.swapaxes(a, 1, 2)[0]  # -> (Hk,S,...)
+    if "k_planes" in store:
+        kq, ks = quantize_kv(k)
+        planes, sign = k_to_bitplanes(kq)  # (NBITS,B,S,Hk,D/8)
+        ptr = (lambda a: jnp.swapaxes(a, 2, 3)) if slot is None else (
+            lambda a: jnp.swapaxes(a, 2, 3)[:, 0])
+        store["k_planes"] = store["k_planes"].at[idx, :, bsel, :, :S].set(ptr(planes))
+        store["k_sign"] = store["k_sign"].at[idx, bsel, :, :S].set(tr(sign))
+        store["k_scale"] = store["k_scale"].at[idx, bsel, :, :S].set(tr(ks))
+        vq, vs = quantize_kv(v)
+        store["v"] = store["v"].at[idx, bsel, :, :S].set(tr(vq))
+        store["v_scale"] = store["v_scale"].at[idx, bsel, :, :S].set(tr(vs))
+    elif "k_scale" in store:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        store["k"] = store["k"].at[idx, bsel, :, :S].set(tr(kq))
+        store["v"] = store["v"].at[idx, bsel, :, :S].set(tr(vq))
+        store["k_scale"] = store["k_scale"].at[idx, bsel, :, :S].set(tr(ks))
+        store["v_scale"] = store["v_scale"].at[idx, bsel, :, :S].set(tr(vs))
+    else:
+        store["k"] = store["k"].at[idx, bsel, :, :S].set(
+            tr(k).astype(store["k"].dtype))
+        store["v"] = store["v"].at[idx, bsel, :, :S].set(
+            tr(v).astype(store["v"].dtype))
+    return store
+
+
+def write_prefill_local(store: Tree, idx: int, k: jax.Array, v: jax.Array,
+                        window: int, *, slot: Optional[int] = None) -> Tree:
+    """Ring-write the last ``min(window, S)`` prompt positions of a local
+    stack (slot ``pos % window``), recording absolute positions for
+    RoPE-correct reuse.  ``slot`` selects one batch row as in
+    :func:`write_prefill`.
+    """
+    B, S = k.shape[:2]
+    take = min(window, S)
+    pos_abs = jnp.arange(S - take, S)
+    slots = jnp.mod(pos_abs, window)
+    k, v = k[:, -take:], v[:, -take:]
+    if slot is None:
+        bsel: Any = slice(None)
+        # .at[idx, :, :, slots] targets (take, B, Hk, D) — advanced dim first
+        tr = lambda a: jnp.swapaxes(a, 0, 1)
+    else:
+        assert B == 1
+        bsel = slot
+        # .at[idx, slot, :, slots] targets (take, Hk, D)
+        tr = lambda a: a[0]
+    if "k_scale" in store:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        store["k"] = store["k"].at[idx, bsel, :, slots].set(tr(kq))
+        store["v"] = store["v"].at[idx, bsel, :, slots].set(tr(vq))
+        store["k_scale"] = store["k_scale"].at[idx, bsel, :, slots].set(tr(ks))
+        store["v_scale"] = store["v_scale"].at[idx, bsel, :, slots].set(tr(vs))
+    else:
+        store["k"] = store["k"].at[idx, bsel, :, slots].set(
+            tr(k).astype(store["k"].dtype))
+        store["v"] = store["v"].at[idx, bsel, :, slots].set(
+            tr(v).astype(store["v"].dtype))
+    if slot is None:
+        store["abs_pos"] = store["abs_pos"].at[idx, :, slots].set(
+            jnp.broadcast_to(pos_abs, (B, take)).T)
+    else:
+        store["abs_pos"] = store["abs_pos"].at[idx, slot, slots].set(pos_abs)
+    return store
+
+
+# --------------------------------------------------------------------------
+# slot lifecycle
+# --------------------------------------------------------------------------
+
+
+def _batch_dim(stack: str, name: str) -> int:
+    # all stacks put batch at dim 1 except the bgpp plane array, whose
+    # leading dims are (layer, plane, batch, ...)
+    return 2 if name == "k_planes" else 1
+
+
+def reset_slot(cache: Tree, layout: CacheLayout, slot: int) -> Tree:
+    """Clear one batch row across every stack without touching live
+    neighbors: KV rows to zero, ring ``abs_pos`` to -1 (nothing valid),
+    mamba state to zero, ``pos[slot]`` to 0.  This is eviction; admission is
+    ``engine.prefill_into_slot`` (which calls this first, so stale ring
+    positions from the previous occupant can never alias into the new
+    request's valid window).
+    """
+
+    def _clear(a, bdim, fill=0):
+        return a.at[(slice(None),) * bdim + (slot,)].set(fill)
+
+    cache = dict(cache)
+    for stack in ("global", "local"):
+        if stack not in cache:
+            continue
+        st = dict(cache[stack])
+        for n, a in st.items():
+            st[n] = _clear(a, _batch_dim(stack, n),
+                           fill=-1 if n == "abs_pos" else 0)
+        cache[stack] = st
+    if "mamba" in cache:
+        cache["mamba"] = {
+            n: _clear(a, 1) for n, a in cache["mamba"].items()
+        }
+    for n in ("cross_k", "cross_v"):
+        if n in cache:
+            cache[n] = _clear(cache[n], 1)
+    cache["pos"] = cache["pos"].at[slot].set(0)
+    return cache

@@ -1,0 +1,112 @@
+"""Request/slot dataclasses for the continuous-batching serving runtime.
+
+A :class:`Request` is one user prompt plus its decode budget and the
+timing/trace fields the scheduler fills in as the request moves through its
+lifecycle.  A :class:`Slot` is one batch index of the live cache; its state
+machine is
+
+    EMPTY -> PREFILLING -> DECODING -> DONE -> (evicted) EMPTY
+
+PREFILLING is transient today (admission prefills synchronously) but is a
+distinct state so chunked/async prefill can slot in without an API change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class SlotState(enum.Enum):
+    EMPTY = "empty"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: prompt is an ndarray
+class Request:
+    """One serving request: a prompt and a max-new-tokens budget."""
+
+    rid: int
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new_tokens: int
+    arrival_step: int = 0  # scheduler step at which the request "arrives"
+    eos_id: Optional[int] = None  # stop decoding on this token (after 1 tok)
+
+    # --- filled in by the scheduler -----------------------------------
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admitted_step: int = -1  # step at which a slot prefilled this request
+    finished_step: int = -1
+    submit_time: float = -1.0  # wall-clock seconds (scheduler clock)
+    admit_time: float = -1.0
+    finish_time: float = -1.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def queue_wait_steps(self) -> int:
+        return self.admitted_step - self.arrival_step
+
+    @property
+    def latency_steps(self) -> int:
+        return self.finished_step - self.arrival_step
+
+    def trace_record(self) -> dict:
+        """JSON-serializable per-request trace entry (``--trace-out``)."""
+        wall = self.finish_time - self.admit_time
+        return {
+            "rid": self.rid,
+            "prompt_len": self.prompt_len,
+            "new_tokens": len(self.generated),
+            "arrival_step": self.arrival_step,
+            "admitted_step": self.admitted_step,
+            "finished_step": self.finished_step,
+            "queue_wait_steps": self.queue_wait_steps,
+            "latency_steps": self.latency_steps,
+            "queue_wait_s": round(self.admit_time - self.submit_time, 6),
+            "latency_s": round(self.finish_time - self.submit_time, 6),
+            "tokens_per_s": round(len(self.generated) / wall, 3)
+            if wall > 0 else None,
+        }
+
+
+@dataclasses.dataclass
+class Slot:
+    """One batch index of the live cache."""
+
+    index: int
+    state: SlotState = SlotState.EMPTY
+    request: Optional[Request] = None
+
+    @property
+    def live(self) -> bool:
+        return self.state in (SlotState.PREFILLING, SlotState.DECODING)
+
+
+def poisson_trace(rng: np.random.Generator, n: int, vocab: int, max_new: int,
+                  arrival_rate: float = 2.0, min_new: int = 2,
+                  max_prompt: int = 23) -> List[Request]:
+    """Poisson-ish request trace shared by the launcher and the throughput
+    benchmark: exponential inter-arrival gaps (in decode steps), prompt
+    lengths ``min(8, max_prompt)..max_prompt``, decode budgets
+    ``min(min_new, max_new)..max_new``.  Cap ``max_prompt`` below the
+    cache's ``max_seq`` so every request is admissible."""
+    lo = max(1, min(min_new, max_new))
+    plo = max(1, min(8, max_prompt))
+    reqs, step = [], 0
+    for rid in range(n):
+        step += int(rng.exponential(arrival_rate))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, (int(rng.integers(plo, max_prompt + 1)),))
+            .astype(np.int32),
+            max_new_tokens=int(rng.integers(lo, max_new + 1)),
+            arrival_step=step,
+        ))
+    return reqs

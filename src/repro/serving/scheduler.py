@@ -1,0 +1,208 @@
+"""Continuous-batching request scheduler over one live per-slot KV cache.
+
+The scheduler owns the cache, a FIFO admission queue, and ``layout.batch``
+slots.  Each engine step it (1) admits arrived requests into EMPTY slots via
+``engine.prefill_into_slot`` — a B=1 forward whose KV lands in exactly one
+batch row, (2) runs ONE batched ``serve_step`` for every slot (per-slot
+``cache["pos"]`` keeps staggered requests position-correct), and (3) evicts
+finished slots with ``kv_cache.reset_slot`` so the next queued request can
+take the row without touching live neighbors.
+
+Greedy sampling by default; pass ``sample_fn`` for anything richer.  The
+scheduler is deliberately host-side python around jitted device steps —
+the same split a production server uses (device graph static, scheduling
+dynamic).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.serving import engine, kv_cache as kvc
+from repro.serving.request import Request, Slot, SlotState
+
+
+def greedy_sample(logits: np.ndarray) -> np.ndarray:
+    """(B, V) logits -> (B,) int32 argmax tokens."""
+    return np.argmax(logits, axis=-1).astype(np.int32)
+
+
+class Scheduler:
+    """Slot-level continuous batching on top of the MCBP serving engine."""
+
+    def __init__(
+        self,
+        params,
+        cfg,
+        layout: kvc.CacheLayout,
+        rules: sh.ShardingRules = sh.ShardingRules(),
+        sample_fn: Callable[[np.ndarray], np.ndarray] = greedy_sample,
+        prefill_kw: Optional[dict] = None,
+    ):
+        assert cfg.family in ("dense", "moe", "vlm"), (
+            "the scheduler admits via transformer prefill; ssm/hybrid/enc-dec"
+            " decode through make_serve_step directly (tests/test_serving.py)"
+        )
+        self.params = params
+        self.cfg = cfg
+        self.layout = layout
+        self.rules = rules
+        self.sample_fn = sample_fn
+        self.prefill_kw = dict(prefill_kw or {})
+
+        self.cache = kvc.init_cache_arrays(cfg, layout)
+        self.slots: List[Slot] = [Slot(i) for i in range(layout.batch)]
+        self.queue: Deque[Request] = collections.deque()
+        self.serve_step = jax.jit(engine.make_serve_step(cfg, layout, rules))
+        # next-token feed per slot; EMPTY rows decode token 0 into garbage
+        # that per-slot valid masks keep invisible to live rows
+        self.tokens = np.zeros((layout.batch, 1), np.int32)
+
+        self.step_count = 0
+        self.finished: List[Request] = []
+        self.occupancy: List[float] = []  # live slots / slots, per step
+        self.decoded_tokens = 0
+
+    # ------------------------------------------------------------------
+    # queue / admission
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        # reject oversized prompts at the API boundary: admission would
+        # otherwise die mid-loop and take every in-flight request with it
+        if request.prompt_len >= self.layout.max_seq:
+            raise ValueError(
+                f"request {request.rid}: prompt_len {request.prompt_len} "
+                f"needs at least one decode slot below max_seq "
+                f"{self.layout.max_seq}"
+            )
+        request.submit_time = time.perf_counter()
+        self.queue.append(request)
+
+    @property
+    def num_pending(self) -> int:
+        return len(self.queue) + sum(1 for s in self.slots if s.live)
+
+    def _next_arrived(self) -> Optional[Request]:
+        for i, req in enumerate(self.queue):
+            if req.arrival_step <= self.step_count:
+                del self.queue[i]
+                return req
+        return None
+
+    def admit(self) -> List[Request]:
+        """Fill EMPTY slots from the queue (FIFO among arrived requests)."""
+        admitted = []
+        for slot in self.slots:
+            if slot.state is not SlotState.EMPTY:
+                continue
+            req = self._next_arrived()
+            if req is None:
+                break
+            slot.state = SlotState.PREFILLING
+            slot.request = req
+            logits, self.cache = engine.prefill_into_slot(
+                self.params, self.cfg, self.layout, self.cache, slot.index,
+                jnp.asarray(req.prompt, jnp.int32), self.rules,
+                **self.prefill_kw,
+            )
+            first = int(self.sample_fn(np.asarray(logits[:, -1]))[0])
+            req.generated.append(first)
+            req.admitted_step = self.step_count
+            req.admit_time = time.perf_counter()
+            self.tokens[slot.index, 0] = first
+            slot.state = SlotState.DECODING
+            admitted.append(req)
+            if self._hit_limit(slot, req):
+                self._finish(slot)
+        return admitted
+
+    # ------------------------------------------------------------------
+    # decode / eviction
+    # ------------------------------------------------------------------
+
+    def _hit_limit(self, slot: Slot, req: Request) -> bool:
+        if len(req.generated) >= req.max_new_tokens:
+            return True
+        # the next decode step writes its KV at index prompt_len + decode
+        # steps so far (== device pos[slot], tracked host-side to avoid a
+        # sync); at max_seq the slot is out of cache room
+        if req.prompt_len + len(req.generated) - 1 >= self.layout.max_seq:
+            return True
+        return (req.eos_id is not None and bool(req.generated)
+                and req.generated[-1] == req.eos_id)
+
+    def _finish(self, slot: Slot) -> None:
+        req = slot.request
+        req.finished_step = self.step_count
+        req.finish_time = time.perf_counter()
+        slot.state = SlotState.DONE
+        self.finished.append(req)
+        # eviction is logical only: the physical row reset (an O(cache)
+        # copy) happens once, at the next admission — prefill_into_slot
+        # always reset_slot's first, and per-slot valid masks keep the
+        # stale row invisible to live neighbors in the meantime.  Call
+        # kv_cache.reset_slot yourself to scrub a row eagerly.
+        self.tokens[slot.index, 0] = 0
+        slot.request = None
+        slot.state = SlotState.EMPTY
+
+    def step(self) -> bool:
+        """Admit, run one batched decode step, harvest, evict.
+
+        Returns False when there was nothing to do (no live slot and no
+        admissible request) — the caller's idle/termination signal.
+        """
+        self.admit()
+        live = [s for s in self.slots if s.state is SlotState.DECODING]
+        self.occupancy.append(len(live) / len(self.slots))
+        if not live:
+            self.step_count += 1
+            return False
+        logits, self.cache = self.serve_step(
+            self.params, self.cache, jnp.asarray(self.tokens)
+        )
+        nxt = self.sample_fn(np.asarray(logits[:, -1]))
+        self.step_count += 1
+        self.decoded_tokens += len(live)
+        for slot in live:
+            req = slot.request
+            tok = int(nxt[slot.index])
+            req.generated.append(tok)
+            self.tokens[slot.index, 0] = tok
+            if self._hit_limit(slot, req):
+                self._finish(slot)
+        return True
+
+    def run(self, max_steps: Optional[int] = None) -> Dict:
+        """Drive steps until every submitted request finished (or the step
+        budget runs out); returns :meth:`stats`."""
+        t0 = time.perf_counter()
+        while self.num_pending:
+            if max_steps is not None and self.step_count >= max_steps:
+                break
+            self.step()
+        return self.stats(time.perf_counter() - t0)
+
+    def stats(self, wall_s: Optional[float] = None) -> Dict:
+        occ = [o for o in self.occupancy if o > 0] or self.occupancy
+        out = {
+            "finished_requests": len(self.finished),
+            "decoded_tokens": self.decoded_tokens,
+            "steps": self.step_count,
+            "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+            "requests": [r.trace_record() for r in self.finished],
+        }
+        if wall_s is not None:
+            out["wall_s"] = round(wall_s, 3)
+            out["tokens_per_s"] = round(self.decoded_tokens / wall_s, 2) \
+                if wall_s > 0 else None
+        return out

@@ -113,6 +113,177 @@ class TestDecodeConsistency:
         )
 
 
+def run_staggered(cfg, layout, params, reqs, total_steps):
+    """Drive a shared 2-slot cache with teacher-forced continuations.
+
+    reqs: list of (slot, admit_step, prompt (S,), cont (T,)).  Returns
+    {slot: [np logits]} — the prefill last-logits plus one entry per decode
+    step while the request is live.  Requests admitted at different steps
+    share every serve_step, which is exactly what the per-slot position
+    vector must make invisible.
+    """
+    cache = kvc.init_cache_arrays(cfg, layout)
+    serve_step = jax.jit(engine.make_serve_step(cfg, layout))
+    toks = np.zeros((layout.batch, 1), np.int32)
+    out = {slot: [] for slot, _, _, _ in reqs}
+    fed = {slot: 0 for slot, _, _, _ in reqs}
+    for t in range(total_steps):
+        for slot, t0, prompt, cont in reqs:
+            if t0 == t:
+                lg, cache = engine.prefill_into_slot(
+                    params, cfg, layout, cache, slot, prompt,
+                    block_q=8, block_k=8,
+                )
+                out[slot].append(np.asarray(lg[0, -1], np.float32))
+                toks[slot, 0] = cont[0]
+                fed[slot] = 1
+        lg, cache = serve_step(params, cache, jnp.asarray(toks))
+        for slot, t0, prompt, cont in reqs:
+            if t0 <= t and fed[slot] < len(cont):
+                out[slot].append(np.asarray(lg[slot, 0], np.float32))
+                toks[slot, 0] = cont[fed[slot]]
+                fed[slot] += 1
+    return out
+
+
+def run_staggered_oracle(arch, kv_format, exact, mcbp=None, atol=1e-5):
+    """THE gold test for position vectorization: two requests admitted at
+    different steps into one batch must produce logits identical to each
+    decoded alone (same batch shape, other slot EMPTY) — bit-for-bit in
+    bf16, within ``atol`` for the quantized formats."""
+    import dataclasses
+
+    cfg = get_config(arch, smoke=True)
+    if mcbp is not None:
+        cfg = dataclasses.replace(cfg, mcbp=mcbp)
+    rng = np.random.default_rng(zlib.crc32(f"stag/{arch}/{kv_format}".encode()))
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+    layout = kvc.layout_for(cfg, 2, S_MAX, kv_format=kv_format)
+    # prompt A shorter than the local window, B longer (both prefill paths)
+    pA = jnp.asarray(rng.integers(0, cfg.vocab_size, (11,)), jnp.int32)
+    pB = jnp.asarray(rng.integers(0, cfg.vocab_size, (19,)), jnp.int32)
+    cA = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    cB = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+
+    joint = run_staggered(cfg, layout, params,
+                          [(0, 0, pA, cA), (1, 3, pB, cB)], 10)
+    alone_a = run_staggered(cfg, layout, params, [(0, 0, pA, cA)], 10)
+    alone_b = run_staggered(cfg, layout, params, [(1, 0, pB, cB)], 10)
+
+    assert len(joint[0]) == len(alone_a[0]) == 6
+    assert len(joint[1]) == len(alone_b[1]) == 6
+    for got, want in [(joint[0], alone_a[0]), (joint[1], alone_b[1])]:
+        for t, (g, w) in enumerate(zip(got, want)):
+            if exact:
+                assert np.array_equal(g, w), (
+                    f"{arch}/{kv_format} step {t}: staggered decode is not "
+                    f"bit-identical to the alone run "
+                    f"(max |d| {np.max(np.abs(g - w))})"
+                )
+            else:
+                err = np.max(np.abs(g - w))
+                assert err < atol, f"{arch}/{kv_format} step {t}: |d|={err}"
+
+
+class TestPerSlotOracle:
+    """Slot isolation under continuous batching (ISSUE 2 acceptance)."""
+
+    def test_dense_bf16_bit_for_bit(self):
+        run_staggered_oracle("deepseek-7b", "bf16", exact=True)
+
+    def test_gemma3_swa_bf16_bit_for_bit(self):
+        # local ring buffers + a global layer: per-slot ring slots and
+        # abs_pos windows must not alias across staggered requests
+        run_staggered_oracle("gemma3-4b", "bf16", exact=True)
+
+    def test_mixtral_moe_swa_bf16_bit_for_bit(self):
+        # MoE routing runs dropless at decode so expert capacity cannot
+        # couple co-scheduled slots
+        run_staggered_oracle("mixtral-8x22b", "bf16", exact=True)
+
+    def test_mixtral_moe_int8(self):
+        run_staggered_oracle("mixtral-8x22b", "int8", exact=False)
+
+    def test_bgpp_per_slot(self):
+        from repro.configs.base import MCBPOptions
+
+        run_staggered_oracle(
+            "phi4-mini-3.8b", "bgpp", exact=False,
+            mcbp=MCBPOptions(bgpp_rounds=4, bgpp_keep_ratio=1.0),
+        )
+
+
+class TestCacheLayoutEdges:
+    def test_layout_for_chunked_windows(self):
+        cfg = get_config("llama4-scout-17b-a16e", smoke=True)
+        layout = kvc.layout_for(cfg, 2, 64, kv_format="int8")
+        # 3 chunked-local : 1 global, ring window = the chunk size
+        assert layout.local_window == cfg.chunk_attention
+        for i in layout.local_layers:
+            kind, w = cfg.layer_attn_window(i)
+            assert kind == "chunked" and w == cfg.chunk_attention
+        for i in layout.global_layers:
+            assert cfg.layer_attn_window(i)[0] == "causal"
+        assert set(layout.local_layers) | set(layout.global_layers) == set(
+            range(cfg.num_layers)
+        )
+
+    def test_layout_clamps_window_to_max_seq(self):
+        cfg = get_config("gemma3-4b", smoke=True)  # sliding_window=16
+        layout = kvc.layout_for(cfg, 1, 8, kv_format="bf16")
+        assert layout.local_window == 8
+
+    @pytest.mark.parametrize("s_prompt", [9, 24])  # < and > local_window=16
+    def test_prefill_ring_contents(self, s_prompt):
+        cfg = get_config("gemma3-4b", smoke=True)
+        params, _ = model_zoo.init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(s_prompt)
+        tokens = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, s_prompt)), jnp.int32
+        )
+        layout = kvc.layout_for(cfg, B, S_MAX, kv_format="bf16")
+        W = layout.local_window
+        _, cache = engine.prefill(params, cfg, layout, tokens,
+                                  block_q=8, block_k=8)
+        abs_pos = np.asarray(cache["local"]["abs_pos"])
+        take = min(W, s_prompt)
+        want = np.full((W,), -1, np.int32)
+        pos_abs = np.arange(s_prompt - take, s_prompt)
+        want[pos_abs % W] = pos_abs
+        for li in range(abs_pos.shape[0]):
+            for b in range(B):
+                assert np.array_equal(abs_pos[li, b], want)
+        assert np.all(np.asarray(cache["pos"]) == s_prompt)
+
+    def test_prefill_into_slot_matches_batch_prefill(self):
+        """Admitting each prompt slot-by-slot into a live cache must build
+        the same per-row state as the whole-batch prefill (same valid
+        logits at the next decode step)."""
+        cfg = get_config("gemma3-4b", smoke=True)
+        params, _ = model_zoo.init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(7)
+        S = 20
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        layout = kvc.layout_for(cfg, B, S_MAX, kv_format="bf16")
+        serve_step = jax.jit(engine.make_serve_step(cfg, layout))
+        cont = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+
+        _, cache_batch = engine.prefill(params, cfg, layout, tokens,
+                                        block_q=8, block_k=8)
+        cache_slot = kvc.init_cache_arrays(cfg, layout)
+        for b in range(B):
+            _, cache_slot = engine.prefill_into_slot(
+                params, cfg, layout, cache_slot, b, tokens[b],
+                block_q=8, block_k=8,
+            )
+        lg_batch, _ = serve_step(params, cache_batch, cont)
+        lg_slot, _ = serve_step(params, cache_slot, cont)
+        np.testing.assert_allclose(
+            np.asarray(lg_batch, np.float32), np.asarray(lg_slot, np.float32),
+            atol=2e-3, rtol=0,
+        )
+
+
 class TestSSMHybridDecode:
     @pytest.mark.parametrize("arch", ["mamba2-1.3b"])
     def test_mamba2_decode_runs(self, arch):
@@ -128,7 +299,7 @@ class TestSSMHybridDecode:
             assert lg.shape == (B, 1, cfg.vocab_size)
             assert not bool(jnp.isnan(lg).any())
             cur = greedy(lg)[:, None]
-        assert int(cache["pos"]) == 4
+        assert np.all(np.asarray(cache["pos"]) == 4)  # per-slot positions
 
     def test_jamba_decode_runs(self):
         cfg = get_config("jamba-1.5-large-398b", smoke=True)
