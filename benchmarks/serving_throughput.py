@@ -1,26 +1,36 @@
-"""Serving throughput: continuous batching vs. lockstep under a Poisson-ish
-arrival trace, for the three KV formats (bf16 / int8 / bgpp).
+"""Serving throughput: chunked vs eager admission vs lockstep decode under a
+Poisson-ish arrival trace, for the three KV formats (bf16 / int8 / bgpp).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py \\
         [--arch phi4-mini-3.8b] [--slots 2] [--requests 6] [--seed 0] \\
-        [--kv-formats bf16,int8,bgpp] [--out BENCH_serving.json]
+        [--kv-formats bf16,int8,bgpp] [--chunk-budget 8] [--quick] \\
+        [--out BENCH_serving.json]
 
-Both runtimes drive the SAME jitted serve_step and the same seeded request
+All runtimes drive the SAME jitted serve_step and the same seeded request
 trace (staggered arrivals, varying prompt lengths and decode budgets):
 
-  continuous — the slot scheduler: per-slot admission the moment a slot
-               frees up, one batched step for all live slots, immediate
-               eviction (``repro.serving.scheduler``).
-  lockstep   — the pre-ISSUE-2 baseline: groups of ``slots`` requests are
-               padded to a common length, prefilled together, and decoded
-               until the LONGEST budget in the group finishes; late
-               arrivals wait for the whole group.
+  chunked  — the production scheduler: bucketed fixed-shape prefill chunks
+             (jitted once per bucket, cache donated) interleaved with the
+             batched decode step, at most --chunk-budget prefill tokens
+             between consecutive decode steps.
+  eager    — the PR-2 baseline: whole-prompt B=1 admission the moment a
+             slot frees up; decode stalls for the full prefill.
+  lockstep — the pre-ISSUE-2 baseline: groups of ``slots`` requests padded
+             to a common length, prefilled together, decoded until the
+             LONGEST budget in the group finishes.
 
-Reported per (format, runtime): tokens/s (useful tokens only), mean slot
-occupancy over busy steps, and per-request queue waits.  Runs on CPU via
-interpret-mode kernel dispatch (auto-detected off-TPU).  CSV on stdout per
-the benchmark contract; ``--out`` writes the JSON consumed as the
-BENCH_serving baseline.
+Reported per (format, runtime): tokens/s (useful tokens only), mean busy
+occupancy (slots holding an admitted request — PREFILLING or DECODING —
+over total slots: a reserved row is occupied capacity even while its
+prompt waits its turn to chunk), TTFT and ITL p50/p95, and per-request
+queue waits.  Runs on CPU via interpret-mode kernel dispatch
+(auto-detected off-TPU).  CSV on stdout per the benchmark contract;
+``--out`` writes the JSON consumed as the BENCH_serving baseline.
+
+``--quick`` runs one format with chunked+eager only and exits nonzero if
+chunked admission shows lower occupancy than eager OR a worse decode-tail
+ITL p95 (the stall chunking exists to remove) — the CI regression gate
+for the admission path.
 """
 
 from __future__ import annotations
@@ -49,9 +59,12 @@ from repro.serving.request import poisson_trace  # noqa: E402
 from repro.serving.scheduler import Scheduler  # noqa: E402
 
 
-def run_continuous(params, cfg, layout, reqs):
-    sched = Scheduler(params, cfg, layout,
-                      prefill_kw=dict(block_q=16, block_k=32))
+def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
+                  shared=None):
+    sched = Scheduler(params, cfg, layout, admission=admission,
+                      chunk_budget=chunk_budget,
+                      prefill_kw=dict(block_q=16, block_k=32),
+                      shared_fns=shared)
     for r in reqs:
         sched.submit(r)
     t0 = time.perf_counter()
@@ -63,16 +76,22 @@ def run_continuous(params, cfg, layout, reqs):
         "mean_occupancy": stats["mean_occupancy"],
         "decoded_tokens": stats["decoded_tokens"],
         "wall_s": stats["wall_s"],
+        "ttft_s_p50": stats["ttft_s"]["p50"],
+        "ttft_s_p95": stats["ttft_s"]["p95"],
+        "itl_s_p50": stats["itl_s"]["p50"],
+        "itl_s_p95": stats["itl_s"]["p95"],
+        "max_prefill_tokens_per_step": stats["max_prefill_tokens_per_step"],
         "mean_queue_wait_steps": float(np.mean(
             [r["queue_wait_steps"] for r in stats["requests"]])),
-    }
+    }, sched.shared_fns()
 
 
-def run_lockstep(params, cfg, layout, reqs):
+def run_lockstep(params, cfg, layout, reqs, serve_step=None):
     """Fixed-budget group decode (the old launch/serve.py skeleton): pad a
     group to one width, prefill together, decode until the group's longest
     budget; admission only at group boundaries."""
-    serve_step = jax.jit(engine.make_serve_step(cfg, layout))
+    if serve_step is None:
+        serve_step = jax.jit(engine.make_serve_step(cfg, layout))
     slots = layout.batch
     queue = list(reqs)
     step_now = 0
@@ -125,44 +144,84 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-formats", default="bf16,int8,bgpp")
+    ap.add_argument("--quick", action="store_true",
+                    help="one format, chunked+eager only — the CI gate")
     ap.add_argument("--out", default=None,
                     help="write the JSON baseline (e.g. BENCH_serving.json)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     params, _ = model_zoo.init(jax.random.key(0), cfg)
+    formats = args.kv_formats.split(",")
+    if args.quick:
+        formats = formats[:1]
+        args.requests = min(args.requests, 4)
 
     results = {"config": vars(args) | {"arch_resolved": cfg.name}}
     emit_header()
-    for fmt in args.kv_formats.split(","):
+    ok = True
+    for fmt in formats:
         layout = kvc.layout_for(cfg, args.slots, args.max_seq, kv_format=fmt)
         entry = {}
-        for runtime, fn in (("continuous", run_continuous),
-                            ("lockstep", run_lockstep)):
+        shared = None
+        runtimes = ["chunked", "eager"] + ([] if args.quick else ["lockstep"])
+        for runtime in runtimes:
             rng = np.random.default_rng(args.seed)  # identical trace
             reqs = poisson_trace(rng, args.requests, cfg.vocab_size,
                                  args.max_new, arrival_rate=3.0,
                                  min_new=max(2, args.max_new // 3),
                                  max_prompt=min(23, args.max_seq - 2))
-            entry[runtime] = fn(params, cfg, layout, reqs)
+            if runtime == "lockstep":
+                entry[runtime] = run_lockstep(
+                    params, cfg, layout, reqs,
+                    serve_step=shared["serve_step"] if shared else None,
+                )
+            else:
+                entry[runtime], shared = run_scheduler(
+                    params, cfg, layout, reqs, runtime, args.chunk_budget,
+                    shared=shared,
+                )
             r = entry[runtime]
             us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
+            extra = ""
+            if runtime != "lockstep":
+                extra = (f";ttft_p95={r['ttft_s_p95']}"
+                         f";itl_p95={r['itl_s_p95']}")
             emit(f"serving_{fmt}_{runtime}", us,
-                 f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}")
-        gain = entry["continuous"]["mean_occupancy"] - \
-            entry["lockstep"]["mean_occupancy"]
-        entry["occupancy_gain"] = round(gain, 4)
+                 f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
+                 + extra)
+        delta = entry["chunked"]["mean_occupancy"] \
+            - entry["eager"]["mean_occupancy"]
+        entry["chunked_vs_eager_occupancy"] = round(delta, 4)
+        itl_c = entry["chunked"]["itl_s_p95"]
+        itl_e = entry["eager"]["itl_s_p95"]
+        if itl_c is not None and itl_e is not None and itl_c > itl_e:
+            # chunking exists to bound the decode-tail stall; a p95 ITL
+            # regression against eager admission fails the gate even if
+            # occupancy still reads fine
+            ok = False
+        if "lockstep" in entry:
+            gain = entry["eager"]["mean_occupancy"] \
+                - entry["lockstep"]["mean_occupancy"]
+            entry["occupancy_gain"] = round(gain, 4)
         results[fmt] = entry
-        print(f"# {fmt}: continuous occupancy "
-              f"{entry['continuous']['mean_occupancy']:.3f} vs lockstep "
-              f"{entry['lockstep']['mean_occupancy']:.3f} "
-              f"({'+' if gain > 0 else ''}{gain:.3f})")
+        print(f"# {fmt}: chunked occupancy "
+              f"{entry['chunked']['mean_occupancy']:.3f} vs eager "
+              f"{entry['eager']['mean_occupancy']:.3f} "
+              f"({'+' if delta >= 0 else ''}{delta:.3f})"
+              + (f", eager vs lockstep "
+                 f"{entry['lockstep']['mean_occupancy']:.3f}"
+                 if "lockstep" in entry else ""))
+        if delta < -1e-9:
+            ok = False
+        if "lockstep" in entry and entry["occupancy_gain"] <= 0:
+            ok = False
 
-    ok = all(results[f]["occupancy_gain"] > 0
-             for f in args.kv_formats.split(","))
-    print(f"# continuous > lockstep occupancy on every format: {ok}")
+    print(f"# chunked >= eager occupancy, chunked itl_p95 <= eager "
+          f"(and eager > lockstep occupancy) on every format: {ok}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)

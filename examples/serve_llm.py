@@ -1,14 +1,19 @@
 """End-to-end serving demo: batched requests through the continuous-batching
-scheduler (per-slot prefill + decode with int8 or bit-planar BGPP KV cache).
+scheduler (chunked prefill admission + per-slot decode with int8 or
+bit-planar BGPP KV cache).
 
     PYTHONPATH=src python examples/serve_llm.py [--arch phi4-mini-3.8b]
-        [--kv-format int8|bf16|bgpp] [--steps 24] [--batch 4]
+        [--kv-format int8|bf16|bgpp] [--admission chunked|eager]
+        [--chunk-budget 8] [--steps 24] [--batch 4]
 
-Each request is admitted into its own slot of ONE live cache
-(``engine.prefill_into_slot``) and all slots decode together in a single
-batched serve_step per token — the identical engine code path the
-decode_32k / long_500k dry-run cells lower for the production meshes.
-Uses the smoke-sized config of the chosen architecture (CPU container).
+Each request is admitted into its own slot of ONE live cache — by default
+through fixed-shape prefill chunks (``engine.ChunkedPrefill``, jitted once
+per bucket width with the cache donated) interleaved with decode, so slots
+already decoding never stall behind a long prompt — and all live slots
+decode together in a single batched serve_step per token, the identical
+engine code path the decode_32k / long_500k dry-run cells lower for the
+production meshes.  Uses the smoke-sized config of the chosen architecture
+(CPU container).
 """
 
 import argparse
@@ -31,6 +36,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi4-mini-3.8b", choices=sorted(ARCH_REGISTRY))
     ap.add_argument("--kv-format", default="int8", choices=["bf16", "int8", "bgpp"])
+    ap.add_argument("--admission", default="chunked", choices=["chunked", "eager"])
+    ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -45,12 +52,15 @@ def main():
     max_seq = args.prompt_len + args.steps + 8
 
     layout = kvc.layout_for(cfg, args.batch, max_seq, kv_format=args.kv_format)
-    sched = Scheduler(params, cfg, layout,
+    sched = Scheduler(params, cfg, layout, admission=args.admission,
+                      chunk_budget=args.chunk_budget,
                       prefill_kw=dict(block_q=16, block_k=32))
+    print(f"[serve] cache: {kvc.cache_bytes(sched.cache)/1e6:.2f} MB "
+          f"({len(layout.global_layers)} global / "
+          f"{len(layout.local_layers)} local layers)")
 
     # batched "requests": random prompts of varying length (no tokenizer in
     # the container); +1 because admission itself samples the first token
-    t0 = time.perf_counter()
     for rid in range(args.batch):
         plen = max(4, args.prompt_len - 3 * rid)
         sched.submit(Request(
@@ -58,24 +68,21 @@ def main():
             prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
             max_new_tokens=args.steps + 1,
         ))
-    sched.admit()
-    jax.block_until_ready(sched.cache["pos"])
-    t_prefill = time.perf_counter() - t0
-    print(f"[serve] arch={cfg.name} kv={args.kv_format} "
-          f"prefill {args.batch} slots (longest {args.prompt_len}) "
-          f"in {t_prefill*1e3:.1f} ms")
-    print(f"[serve] cache: {kvc.cache_bytes(sched.cache)/1e6:.2f} MB "
-          f"({len(layout.global_layers)} global / "
-          f"{len(layout.local_layers)} local layers)")
 
     t0 = time.perf_counter()
-    sched.run(max_steps=args.steps)
+    sched.run(max_steps=10_000)
     dt = time.perf_counter() - t0
-    done = sched.finished + [s.request for s in sched.slots if s.request]
-    print(f"[serve] decoded {args.steps} steps x {args.batch} seqs in "
-          f"{dt*1e3:.1f} ms ({sched.decoded_tokens/dt:.1f} tok/s on CPU "
-          f"smoke, occupancy {np.mean(sched.occupancy):.2f})")
-    for req in sorted(done, key=lambda r: r.rid)[:2]:
+    stats = sched.stats(dt)
+    print(f"[serve] arch={cfg.name} kv={args.kv_format} "
+          f"admission={args.admission}: decoded {stats['decoded_tokens']} "
+          f"tokens across {args.batch} seqs in {dt*1e3:.1f} ms "
+          f"({stats['tokens_per_s']:.1f} tok/s on CPU smoke, "
+          f"occupancy {stats['mean_occupancy']:.2f})")
+    print(f"[serve] ttft_s p50={stats['ttft_s']['p50']} "
+          f"p95={stats['ttft_s']['p95']}  itl_s p50={stats['itl_s']['p50']} "
+          f"p95={stats['itl_s']['p95']}  "
+          f"max prefill tokens/step={stats['max_prefill_tokens_per_step']}")
+    for req in sorted(sched.finished, key=lambda r: r.rid)[:2]:
         print(f"[serve] seq{req.rid}: {req.generated[:16]}...")
 
 

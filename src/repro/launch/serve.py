@@ -3,15 +3,19 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \\
         --kv-format int8 --requests 8 --slots 4 --seed 0 \\
+        [--admission chunked|eager] [--chunk-budget 16] \\
         [--trace-out trace.json] [--data 1 --model 1]
 
 Requests arrive on a Poisson-ish trace with distinct prompt lengths and
-decode budgets; the scheduler admits each into the first EMPTY slot via
-``prefill_into_slot`` (one B=1 forward, KV written into a single batch row
-of the live cache), decodes every live slot in ONE batched serve_step, and
-evicts finished slots immediately — no lockstep barriers.  ``--trace-out``
-dumps per-request latency/queue-wait and aggregate throughput as JSON so
-runs are reproducible (``--seed``) and comparable across PRs.
+decode budgets.  With the default ``--admission chunked`` the scheduler
+feeds each arriving prompt through fixed-shape, bucketed prefill chunks
+(jitted once per bucket, cache donated) interleaved with the batched decode
+step, so a long prompt never stalls in-flight decoders for more than
+``--chunk-budget`` prefill tokens; ``--admission eager`` keeps the
+whole-prompt B=1 admission as the reference baseline.  ``--trace-out``
+dumps per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
+throughput as JSON so runs are reproducible (``--seed``) and comparable
+across PRs.
 """
 
 from __future__ import annotations
@@ -43,6 +47,13 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--admission", default="chunked",
+                    choices=["chunked", "eager"],
+                    help="chunked: bucketed jitted prefill interleaved with "
+                         "decode; eager: whole-prompt B=1 admission")
+    ap.add_argument("--chunk-budget", type=int, default=16,
+                    help="max prefill tokens between consecutive batched "
+                         "decode steps (chunked admission)")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="mean inter-arrival gap in decode steps")
     ap.add_argument("--seed", type=int, default=0,
@@ -65,6 +76,8 @@ def main():
     layout = kvc.layout_for(cfg, args.slots, args.max_seq,
                             kv_format=args.kv_format)
     sched = Scheduler(params, cfg, layout, rules,
+                      admission=args.admission,
+                      chunk_budget=args.chunk_budget,
                       prefill_kw=dict(block_q=16, block_k=32))
     for req in poisson_trace(rng, args.requests, cfg.vocab_size,
                              args.max_new, args.arrival_rate,
@@ -84,16 +97,22 @@ def main():
     dt = time.perf_counter() - t0
 
     stats = sched.stats(dt)
-    print(f"[serve] arch={cfg.name} kv={args.kv_format}: "
+    print(f"[serve] arch={cfg.name} kv={args.kv_format} "
+          f"admission={args.admission}: "
           f"{stats['finished_requests']} requests, "
           f"{stats['decoded_tokens']} tokens in {dt:.1f}s "
           f"({stats['tokens_per_s']:.1f} tok/s CPU smoke, "
           f"mean occupancy {stats['mean_occupancy']:.2f})")
+    print(f"[serve] ttft_s p50={stats['ttft_s']['p50']} "
+          f"p95={stats['ttft_s']['p95']}  "
+          f"itl_s p50={stats['itl_s']['p50']} p95={stats['itl_s']['p95']}  "
+          f"max prefill tokens/step={stats['max_prefill_tokens_per_step']}")
     if args.trace_out:
         stats["config"] = {
             "arch": cfg.name, "kv_format": args.kv_format,
             "slots": args.slots, "max_seq": args.max_seq,
             "requests": args.requests, "max_new": args.max_new,
+            "admission": args.admission, "chunk_budget": args.chunk_budget,
             "arrival_rate": args.arrival_rate, "seed": args.seed,
         }
         with open(args.trace_out, "w") as f:

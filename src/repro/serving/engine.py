@@ -20,10 +20,11 @@ caches), indexing the stacked parameter pytrees with static layer ids.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import attention, bgpp as bgpp_mod, bitslice
 from repro.distributed import sharding as sh
@@ -43,69 +44,78 @@ def _split_heads(x, B, H, Dh):
     return x.reshape(B, H, Dh)
 
 
-def _decode_attend(
-    q,  # (B, Hq, Dh)
+def _cache_attend(
+    q,  # (B, Q, Hq, Dh) — Q query tokens per batch row
     entry: Tree,  # cache stack slices for this layer — heads-major (B,Hk,S,D)
-    valid,  # (B, S) bool
+    valid,  # (B, Q, S) bool per-query key masks
     cfg,
     fmt: str,
     head_mask=None,  # (B, Hk, S) BGPP alive sets
 ):
-    """Decode attention over the heads-major cache.
+    """Attention over the heads-major cache for Q query tokens per row.
 
     Heads-major layout (A1) avoids cache transposes; the int8 format runs
     the paper-faithful 8-bit QK^T (A2) and 8-bit PV (A3) as int8 MXU dots,
-    so the cache is consumed directly with no dequantized copies.
+    so the cache is consumed directly with no dequantized copies.  Decode
+    calls it with Q=1; chunked prefill with Q=chunk — the key axis is the
+    full ``S`` stack either way, so per-query reductions are shape-stable
+    (the chunked-admission bit-exactness contract).  Returns f32
+    ``(B, Q, Hq, Dh)``.
     """
-    B, Hq, Dh = q.shape
+    B, Q, Hq, Dh = q.shape
     Hk = cfg.num_kv_heads
     g = Hq // Hk
     scale = Dh**-0.5
-    qg = q.reshape(B, Hk, g, Dh).astype(jnp.float32)
+    qg = q.reshape(B, Q, Hk, g, Dh).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+
+    mask = valid[:, None, None]  # (B, 1, 1, Q, S)
+    if head_mask is not None:
+        mask = mask & head_mask[:, :, None, None, :]
 
     if fmt == "bf16":
         logits = jnp.einsum(
-            "bhgd,bhsd->bhgs", qg, entry["k"].astype(jnp.float32)
+            "bhgqd,bhsd->bhgqs", qg, entry["k"].astype(jnp.float32)
         ) * scale
-        mask = valid[:, None, None, :]
-        if head_mask is not None:
-            mask = mask & head_mask[:, :, None, :]
         logits = jnp.where(mask, logits, NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum("bhgs,bhsd->bhgd", probs, entry["v"].astype(jnp.float32))
-        return out.reshape(B, Hq, Dh)
+        out = jnp.einsum("bhgqs,bhsd->bhgqd", probs, entry["v"].astype(jnp.float32))
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, Q, Hq, Dh)
 
-    # paper §2.2 formal compute, 8-bit QK^T: quantize q per (b,h,g) row and
-    # run an int8×int8 MXU dot with int32 accumulation — no dequantized f32
-    # copy of the key cache is ever materialized (§Perf iteration A2).
+    # paper §2.2 formal compute, 8-bit QK^T: quantize q per (b,h,g,q) row
+    # and run an int8×int8 MXU dot with int32 accumulation — no dequantized
+    # f32 copy of the key cache is ever materialized (§Perf iteration A2).
     q_scale = jnp.maximum(jnp.max(jnp.abs(qg), axis=-1, keepdims=True), 1e-8) / 127.0
     q_q = jnp.clip(jnp.round(qg / q_scale), -127, 127).astype(jnp.int8)
     logits_i = jnp.einsum(
-        "bhgd,bhsd->bhgs", q_q, entry["k"], preferred_element_type=jnp.int32
+        "bhgqd,bhsd->bhgqs", q_q, entry["k"], preferred_element_type=jnp.int32
     )
     logits = (
         logits_i.astype(jnp.float32)
         * q_scale
-        * entry["k_scale"][:, :, None, :]
+        * entry["k_scale"][:, :, None, None, :]
         * scale
     )
-    mask = valid[:, None, None, :]
-    if head_mask is not None:
-        mask = mask & head_mask[:, :, None, :]
     logits = jnp.where(mask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
 
     # paper's 8-bit PV (§Perf iteration A3): fold the per-key v_scale into
-    # the probs, quantize the weighted probs per (b,h,g) row to int8, and
+    # the probs, quantize the weighted probs per (b,h,g,q) row to int8, and
     # keep V int8 in the dot (f32 accumulation on the MXU).
-    w = probs * entry["v_scale"][:, :, None, :]  # (B,Hk,g,S)
+    w = probs * entry["v_scale"][:, :, None, None, :]  # (B,Hk,g,Q,S)
     w_scale = jnp.maximum(jnp.max(w, axis=-1, keepdims=True), 1e-20) / 127.0
     w_q = jnp.clip(jnp.round(w / w_scale), 0, 127).astype(jnp.int8)
     out = jnp.einsum(
-        "bhgs,bhsd->bhgd", w_q, entry["v"], preferred_element_type=jnp.float32
+        "bhgqs,bhsd->bhgqd", w_q, entry["v"], preferred_element_type=jnp.float32
     )
     out = out * w_scale
-    return out.reshape(B, Hq, Dh)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Q, Hq, Dh)
+
+
+def _decode_attend(q, entry, valid, cfg, fmt, head_mask=None):
+    """Single-token wrapper: q (B, Hq, Dh), valid (B, S) -> (B, Hq, Dh)."""
+    return _cache_attend(
+        q[:, None], entry, valid[:, None], cfg, fmt, head_mask=head_mask
+    )[:, 0]
 
 
 def _bgpp_decode_attend(q, entry, valid, cfg):
@@ -444,10 +454,11 @@ def prefill_into_slot(params, cfg, layout: kvc.CacheLayout, cache, slot: int,
     fills the cache leaves no index for the first decoded token's KV —
     out-of-bounds scatters drop silently, corrupting logits).
 
-    Admission runs eagerly: reset + per-layer writes each copy the stacked
-    store, so a production-size cache wants this jitted with the cache
-    donated (needs prompt-length bucketing to bound recompiles — planned
-    alongside the paged cache).
+    This is the *eager reference* admission path: one arbitrary-length
+    forward per prompt, recompiling per length and copying the stacked
+    store per layer.  Production admission is :class:`ChunkedPrefill` —
+    fixed-shape ``(1, C)`` chunks, jitted once per bucket width with the
+    cache donated — which the scheduler interleaves with batched decode.
     """
     assert cfg.family in ("dense", "moe", "vlm")
     tokens = prompt[None] if prompt.ndim == 1 else prompt
@@ -472,3 +483,272 @@ def prefill_into_slot(params, cfg, layout: kvc.CacheLayout, cache, slot: int,
         )
     cache["pos"] = cache["pos"].at[slot].set(S)
     return logits[:, -1:], cache
+
+
+# --------------------------------------------------------------------------
+# chunked, bucketed prefill — the jitted admission path
+# --------------------------------------------------------------------------
+#
+# A chunk step runs a fixed-shape (1, C) forward for one slot of a live
+# cache at an arbitrary token offset.  Two ingredients make the composition
+# of chunks BIT-IDENTICAL (bf16) to a single whole-prompt chunk:
+#
+#   * global layers write the chunk's KV into the cache FIRST and then
+#     attend over the full (S_max,) stack row with per-query causal masks —
+#     the key axis has one fixed shape and one fixed value layout no matter
+#     how the prompt was chunked, so per-query reductions associate
+#     identically;
+#   * local (ring) layers attend per query over a gathered fixed-width
+#     window (lane r of query p always holds position p - W + 1 + r), so
+#     lane placement is chunking-invariant too.  Ring writes happen after
+#     the attend (a chunk write would evict window entries its own earlier
+#     queries still need).
+#
+# Padded lanes beyond ``length`` carry garbage queries (their logits are
+# never read) and their KV writes scatter to kvc.OOB_INDEX (dropped).
+
+
+def _chunk_attend_local(cfg, layout, store, li, slot, q, k, v, qpos, offset,
+                        kind, w):
+    """Fixed-width gathered-window attention for a ring-buffered local layer.
+
+    q/k/v: fresh chunk projections ``(1, C, H, Dh)``; qpos ``(C,)`` global
+    positions; the ring row holds positions ``< offset``.  Query at position
+    p attends lanes holding positions ``p-W+1 .. p`` gathered from
+    [ring (position-ordered) | fresh chunk], masked by presence + the
+    sliding/chunked window rule.  Returns f32 ``(1, C, Hq, Dh)``.
+    """
+    B, C, Hq, Dh = q.shape
+    Hk = cfg.num_kv_heads
+    g = Hq // Hk
+    W = layout.local_window
+
+    if "k_scale" in store:
+        kr = store["k"][li, slot].astype(jnp.float32) \
+            * store["k_scale"][li, slot][..., None]
+        vr = store["v"][li, slot].astype(jnp.float32) \
+            * store["v_scale"][li, slot][..., None]
+    else:
+        kr = store["k"][li, slot].astype(jnp.float32)
+        vr = store["v"][li, slot].astype(jnp.float32)
+    ap = store["abs_pos"][li, slot]  # (W,)
+
+    # reorder ring lanes to ascending position: lane j holds offset-W+j
+    order = jnp.mod(offset - W + jnp.arange(W), W)
+    kr, vr, ap = kr[:, order], vr[:, order], ap[order]
+    ring_pos = jnp.where((ap >= 0) & (ap < offset), ap, -(1 << 30))
+
+    buf_k = jnp.concatenate([kr, jnp.swapaxes(k[0], 0, 1).astype(jnp.float32)],
+                            axis=1)  # (Hk, W+C, D)
+    buf_v = jnp.concatenate([vr, jnp.swapaxes(v[0], 0, 1).astype(jnp.float32)],
+                            axis=1)
+    buf_pos = jnp.concatenate([ring_pos, qpos])  # (W+C,)
+
+    # query i gathers buffer lanes i+1 .. i+W == positions qpos[i]-W+1..qpos[i]
+    idx = jnp.arange(C)[:, None] + 1 + jnp.arange(W)[None, :]  # (C, W)
+    gk = buf_k[:, idx]  # (Hk, C, W, D)
+    gv = buf_v[:, idx]
+    expect = qpos[:, None] - W + 1 + jnp.arange(W)[None, :]  # (C, W)
+    valid = (buf_pos[idx] == expect) & (expect >= 0)
+    if kind == "chunked":
+        cw = jnp.maximum(w, 1)
+        valid = valid & (expect // cw == qpos[:, None] // cw)
+    else:  # sliding; no-op when w == W, real when W was clamped to max_seq
+        valid = valid & (qpos[:, None] - expect < w)
+
+    qg = q[0].reshape(C, Hk, g, Dh).transpose(1, 2, 0, 3).astype(jnp.float32)
+    logits = jnp.einsum("hgqd,hqwd->hgqw", qg, gk) * Dh**-0.5
+    logits = jnp.where(valid[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hgqw,hqwd->hgqd", probs, gv)
+    return out.transpose(2, 0, 1, 3).reshape(1, C, Hq, Dh)
+
+
+def _attn_chunk_layer(p, cfg, layout, cache, x, slot, offset, length,
+                      layer_idx, theta, rules):
+    """One attention layer of the chunk forward.  x: (1, C, D)."""
+    B, C, _ = x.shape
+    fmt = layout.kv_format
+    h = layers.apply_norm(x, p["attn_norm"], cfg.norm) if "attn_norm" in p else x
+    qpos = offset + jnp.arange(C, dtype=jnp.int32)  # (C,) global positions
+    q, k, v = layers.qkv_project(
+        p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        qpos[None], theta, qk_norm=cfg.qk_norm,
+    )
+    kind, w = cfg.layer_attn_window(layer_idx)
+
+    if layer_idx in layout.local_layers:
+        li = layout.local_layers.index(layer_idx)
+        out = _chunk_attend_local(
+            cfg, layout, cache["local"], li, slot, q, k, v, qpos, offset,
+            kind, w,
+        )
+        cache["local"] = kvc.write_prefill_local(
+            cache["local"], li, k, v, layout.local_window,
+            slot=slot, offset=offset, length=length,
+        )
+    else:
+        gi = layout.global_layers.index(layer_idx)
+        # write first: chunk keys are read back from the stack, keeping the
+        # key axis (S_max,) for every bucket width
+        cache["global"] = kvc.write_prefill(
+            cache["global"], gi, k, v, slot=slot, offset=offset, length=length,
+        )
+        store = cache["global"]
+        S = layout.max_seq
+        valid = (jnp.arange(S)[None, :] <= qpos[:, None])[None]  # (1, C, S)
+        if fmt == "bgpp":
+            # prefill attends the full causal context: reconstruct the exact
+            # int8 K from the bit planes (BGPP's progressive prediction is a
+            # decode-time saving; there is nothing to skip at prefill)
+            planes = store["k_planes"][gi][:, slot][:, None]
+            entry = {
+                "k": kvc.bitplanes_to_k(
+                    planes, store["k_sign"][gi, slot][None]
+                ).astype(jnp.int8),
+                "k_scale": store["k_scale"][gi, slot][None],
+                "v": store["v"][gi, slot][None],
+                "v_scale": store["v_scale"][gi, slot][None],
+            }
+            out = _cache_attend(q, entry, valid, cfg, "int8")
+        else:
+            entry = {n: store[n][gi, slot][None] for n in store}
+            out = _cache_attend(q, entry, valid, cfg, fmt)
+
+    out = out.astype(x.dtype).reshape(B, C, -1) @ p["attn"]["wo"]
+    if cfg.post_norms and "post_attn_norm" in p:
+        out = layers.apply_norm(out, p["post_attn_norm"], cfg.norm)
+    return out, cache
+
+
+def make_prefill_chunk(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
+    """Builds the pure chunk step for one (cfg, layout):
+
+        prefill_chunk(params, cache, tokens (1, C), slot, offset, length)
+            -> (logits (1, C, V), cache')
+
+    ``slot``/``offset``/``length`` are traced int32 scalars, so one jit
+    compilation per chunk width ``C`` covers every slot, token offset, and
+    padding amount.  The chunk's KV lands at positions
+    ``[offset, offset+length)`` of row ``slot`` and ``cache['pos'][slot]``
+    is set to ``offset + length`` (absolute, so interleaved decode steps of
+    other slots can never drift a prefilling row's position).
+    """
+    assert cfg.family in ("dense", "moe", "vlm"), (
+        "chunked admission covers transformer families; ssm/hybrid/enc-dec"
+        " decode through make_serve_step directly"
+    )
+    dtype = layers._dtype(cfg.dtype)
+    thetas = transformer.layer_thetas(cfg)
+
+    def prefill_chunk(params, cache, tokens, slot, offset, length):
+        x = params["embed"][tokens].astype(dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+        x = sh.constrain(x, rules, (sh.BATCH, None, None))
+        for i in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            a, cache = _attn_chunk_layer(
+                p, cfg, layout, cache, x, slot, offset, length, i,
+                float(thetas[i]), rules,
+            )
+            x = x + a
+            # dropless MoE (capacity_factor=E): padded garbage lanes can
+            # never steal expert capacity from valid prompt tokens
+            x = x + _ffn_decode_layer(p, cfg, x, rules)
+        x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+        head = params.get("lm_head")
+        logits = x @ (head if head is not None else params["embed"].T.astype(dtype))
+        logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
+        cache["pos"] = cache["pos"].at[slot].set(offset + length)
+        return logits, cache
+
+    return prefill_chunk
+
+
+def default_buckets(chunk_budget: int) -> Tuple[int, ...]:
+    """Bucket widths for a token budget: the budget itself plus one half-
+    size tail bucket (fewer wasted pad lanes on the last chunk of a prompt,
+    at the cost of one extra compile)."""
+    budget = max(1, int(chunk_budget))
+    return tuple(sorted({budget, max(4, budget // 2)} - {0}))
+
+
+class ChunkedPrefill:
+    """Jitted, bucketed chunk-prefill engine for one (cfg, layout, rules).
+
+    Owns two donated-cache jits: the chunk step (compiled once per bucket
+    width — assert via :attr:`num_compiles`) and the slot reset.  The
+    scheduler drives it chunk-by-chunk; :meth:`admit` runs a whole prompt
+    (used by tests/benchmarks as the whole-prompt reference: with a bucket
+    >= the prompt length it is a single fixed-shape forward).
+    """
+
+    def __init__(self, cfg, layout: kvc.CacheLayout,
+                 rules: sh.ShardingRules = sh.ShardingRules(),
+                 buckets: Tuple[int, ...] = (8, 16)):
+        self.cfg = cfg
+        self.layout = layout
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        assert self.buckets and self.buckets[0] >= 1
+        self._chunk = jax.jit(
+            make_prefill_chunk(cfg, layout, rules), donate_argnums=(1,)
+        )
+        self._reset = jax.jit(
+            lambda cache, slot: kvc.reset_slot(cache, layout, slot),
+            donate_argnums=(0,),
+        )
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n, or the largest bucket (caller chunks)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    @property
+    def num_compiles(self) -> int:
+        """Compiled chunk variants — the donate/bucketing contract says this
+        never exceeds ``len(self.buckets)``."""
+        return self._chunk._cache_size()
+
+    def reset(self, cache, slot: int):
+        """Donated-cache slot scrub (the first step of every admission)."""
+        return self._reset(cache, int(slot))
+
+    def run_chunk(self, params, cache, slot: int, chunk_tokens, offset: int):
+        """One fixed-shape chunk step: pads ``chunk_tokens`` (1-D, length
+        n <= largest bucket) to its bucket and runs the jitted step.
+        Returns ``(logits (1, C, V), cache, n)``."""
+        toks = np.asarray(chunk_tokens, np.int32).reshape(-1)
+        n = toks.shape[0]
+        C = self.bucket_for(n)
+        assert n <= C, f"chunk of {n} tokens exceeds largest bucket {C}"
+        if n < C:
+            toks = np.pad(toks, (0, C - n))
+        logits, cache = self._chunk(
+            params, cache, jnp.asarray(toks[None]), int(slot), int(offset),
+            int(n),
+        )
+        return logits, cache, n
+
+    def admit(self, params, cache, slot: int, prompt, *,
+              max_chunk: Optional[int] = None, reset: bool = True):
+        """Whole-prompt admission through the chunk path: reset the slot,
+        then consume the prompt in <= ``max_chunk``-token chunks (default:
+        the largest bucket).  Returns ``(last_logits (1, 1, V), cache)`` —
+        same contract as :func:`prefill_into_slot`."""
+        toks = np.asarray(prompt, np.int32).reshape(-1)
+        S = toks.shape[0]
+        assert 0 < S < self.layout.max_seq
+        step = min(self.buckets[-1], max_chunk or self.buckets[-1])
+        if reset:
+            cache = self.reset(cache, slot)
+        off = 0
+        logits, n = None, 0
+        while off < S:
+            logits, cache, n = self.run_chunk(
+                params, cache, slot, toks[off:off + step], off
+            )
+            off += n
+        return logits[:, n - 1:n], cache

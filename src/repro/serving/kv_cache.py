@@ -31,6 +31,10 @@ Tree = Dict[str, Any]
 
 NBITS = bitslice.WEIGHT_MAG_BITS  # 7 magnitude planes + sign
 
+# scatter target for padded chunk lanes: far out of every seq axis, so JAX's
+# drop-out-of-bounds scatter semantics discard the write (never clamps)
+OOB_INDEX = 1 << 30
+
 
 def _dt(name: str):
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
@@ -303,15 +307,62 @@ def write_token(store: Tree, idx: int, k: jax.Array, v: jax.Array,
     return store
 
 
+def _scatter_chunk_kv(store: Tree, idx: int, slot, tpos, k, v) -> Tree:
+    """Quantize-and-scatter one chunk's K/V rows (int8 or bf16 stores) into
+    seq indices ``tpos`` of batch row ``slot`` — the shared tail of both
+    chunked write paths (``.at[idx, slot, :, tpos]`` selects ``(S, Hk, ...)``
+    advanced-dims-first; OOB lanes drop)."""
+    if "k_scale" in store:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        store["k"] = store["k"].at[idx, slot, :, tpos].set(kq[0])
+        store["v"] = store["v"].at[idx, slot, :, tpos].set(vq[0])
+        store["k_scale"] = store["k_scale"].at[idx, slot, :, tpos].set(ks[0])
+        store["v_scale"] = store["v_scale"].at[idx, slot, :, tpos].set(vs[0])
+    else:
+        store["k"] = store["k"].at[idx, slot, :, tpos].set(
+            k[0].astype(store["k"].dtype))
+        store["v"] = store["v"].at[idx, slot, :, tpos].set(
+            v[0].astype(store["v"].dtype))
+    return store
+
+
 def write_prefill(store: Tree, idx: int, k: jax.Array, v: jax.Array,
-                  *, slot: Optional[int] = None) -> Tree:
+                  *, slot: Optional[int] = None, offset=None,
+                  length=None) -> Tree:
     """Write a whole prompt's K/V into positions ``[0, S)`` of a global stack.
 
     k/v: ``(B, S, Hk, Dh)``.  ``slot=None`` writes every batch row (fresh
     whole-batch prefill); ``slot=b`` writes row ``b`` only — admission of one
     prompt (``B == 1``) into a single slot of a *live* cache.
+
+    ``offset``/``length`` select the chunked-admission path: the ``S`` lanes
+    are a fixed-shape prefill chunk whose first ``length`` lanes are valid
+    prompt tokens landing at positions ``[offset, offset+length)``; padded
+    lanes scatter to :data:`OOB_INDEX` and are dropped.  ``slot``/``offset``/
+    ``length`` may all be traced scalars, so one jitted chunk step serves
+    every slot and token offset (compiled once per chunk width ``S``).
     """
     S = k.shape[1]
+    if offset is not None:
+        assert slot is not None and k.shape[0] == 1, \
+            "chunked writes admit one prompt into one slot"
+        length = S if length is None else length
+        lane = jnp.arange(S)
+        tpos = jnp.where(lane < length, offset + lane, OOB_INDEX)
+        if "k_planes" in store:
+            kq, ks = quantize_kv(k)
+            planes, sign = k_to_bitplanes(kq)  # (NBITS,1,S,Hk,D/8)
+            # .at[idx, :, slot, :, tpos] selects (S, NBITS, Hk, D/8)
+            store["k_planes"] = store["k_planes"].at[idx, :, slot, :, tpos].set(
+                jnp.moveaxis(planes[:, 0], 0, 1))
+            store["k_sign"] = store["k_sign"].at[idx, slot, :, tpos].set(sign[0])
+            store["k_scale"] = store["k_scale"].at[idx, slot, :, tpos].set(ks[0])
+            vq, vs = quantize_kv(v)
+            store["v"] = store["v"].at[idx, slot, :, tpos].set(vq[0])
+            store["v_scale"] = store["v_scale"].at[idx, slot, :, tpos].set(vs[0])
+            return store
+        return _scatter_chunk_kv(store, idx, slot, tpos, k, v)
     if slot is None:
         bsel: Any = slice(None)
         tr = lambda a: jnp.swapaxes(a, 1, 2)  # (B,S,Hk,...) -> (B,Hk,S,...)
@@ -346,13 +397,30 @@ def write_prefill(store: Tree, idx: int, k: jax.Array, v: jax.Array,
 
 
 def write_prefill_local(store: Tree, idx: int, k: jax.Array, v: jax.Array,
-                        window: int, *, slot: Optional[int] = None) -> Tree:
+                        window: int, *, slot: Optional[int] = None,
+                        offset=None, length=None) -> Tree:
     """Ring-write the last ``min(window, S)`` prompt positions of a local
     stack (slot ``pos % window``), recording absolute positions for
     RoPE-correct reuse.  ``slot`` selects one batch row as in
     :func:`write_prefill`.
+
+    ``offset``/``length`` (traced ok) select the chunked-admission path:
+    lanes are chunk tokens at positions ``[offset, offset+length)``.  Only
+    the last ``min(length, window)`` valid lanes are written — the earlier
+    ones would be ring-evicted by them anyway, and masking them keeps the
+    kept lanes' ring slots unique so the scatter has no write races.
     """
     B, S = k.shape[:2]
+    if offset is not None:
+        assert slot is not None and B == 1, \
+            "chunked writes admit one prompt into one slot"
+        length = S if length is None else length
+        lane = jnp.arange(S)
+        keep = (lane < length) & (lane >= length - window)
+        tpos = jnp.where(keep, jnp.mod(offset + lane, window), OOB_INDEX)
+        store = _scatter_chunk_kv(store, idx, slot, tpos, k, v)
+        store["abs_pos"] = store["abs_pos"].at[idx, slot, tpos].set(offset + lane)
+        return store
     take = min(window, S)
     pos_abs = jnp.arange(S - take, S)
     slots = jnp.mod(pos_abs, window)

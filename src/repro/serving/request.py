@@ -7,8 +7,11 @@ machine is
 
     EMPTY -> PREFILLING -> DECODING -> DONE -> (evicted) EMPTY
 
-PREFILLING is transient today (admission prefills synchronously) but is a
-distinct state so chunked/async prefill can slot in without an API change.
+With chunked admission PREFILLING is a real multi-step state: the slot
+stays in it while the scheduler feeds the prompt through fixed-shape
+prefill chunks between batched decode steps, ``Slot.prefill_pos`` tracking
+how many prompt tokens have been consumed.  Eager admission passes through
+PREFILLING synchronously inside one ``admit()`` call.
 """
 
 from __future__ import annotations
@@ -36,14 +39,24 @@ class Request:
     max_new_tokens: int
     arrival_step: int = 0  # scheduler step at which the request "arrives"
     eos_id: Optional[int] = None  # stop decoding on this token (after 1 tok)
+    # teacher-forcing hook: when set, token t of the response is
+    # forced_tokens[t] instead of the sampled token (logits are still
+    # produced/recorded) — the serving oracles compare quantized formats
+    # like-for-like per position without greedy compounding
+    forced_tokens: Optional[np.ndarray] = None
 
     # --- filled in by the scheduler -----------------------------------
     generated: List[int] = dataclasses.field(default_factory=list)
-    admitted_step: int = -1  # step at which a slot prefilled this request
+    admitted_step: int = -1  # step at which a slot started prefilling this
+    first_token_step: int = -1  # step at which prefill finished (token 1)
     finished_step: int = -1
     submit_time: float = -1.0  # wall-clock seconds (scheduler clock)
     admit_time: float = -1.0
+    first_token_time: float = -1.0
     finish_time: float = -1.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    # per-token logits rows (np.float32 (V,)), when Scheduler(record_logits=True)
+    logit_rows: Optional[List[np.ndarray]] = None
 
     @property
     def prompt_len(self) -> int:
@@ -57,19 +70,32 @@ class Request:
     def latency_steps(self) -> int:
         return self.finished_step - self.arrival_step
 
+    @property
+    def ttft_s(self) -> float:
+        """Submit -> first generated token (includes queue wait + prefill)."""
+        return self.first_token_time - self.submit_time
+
+    def itl_gaps_s(self) -> np.ndarray:
+        """Inter-token latency samples (seconds between consecutive tokens)."""
+        return np.diff(np.asarray(self.token_times, np.float64))
+
     def trace_record(self) -> dict:
         """JSON-serializable per-request trace entry (``--trace-out``)."""
         wall = self.finish_time - self.admit_time
+        gaps = self.itl_gaps_s()
         return {
             "rid": self.rid,
             "prompt_len": self.prompt_len,
             "new_tokens": len(self.generated),
             "arrival_step": self.arrival_step,
             "admitted_step": self.admitted_step,
+            "first_token_step": self.first_token_step,
             "finished_step": self.finished_step,
             "queue_wait_steps": self.queue_wait_steps,
             "latency_steps": self.latency_steps,
             "queue_wait_s": round(self.admit_time - self.submit_time, 6),
+            "ttft_s": round(self.ttft_s, 6),
+            "mean_itl_s": round(float(np.mean(gaps)), 6) if gaps.size else None,
             "latency_s": round(self.finish_time - self.submit_time, 6),
             "tokens_per_s": round(len(self.generated) / wall, 3)
             if wall > 0 else None,
@@ -83,6 +109,7 @@ class Slot:
     index: int
     state: SlotState = SlotState.EMPTY
     request: Optional[Request] = None
+    prefill_pos: int = 0  # prompt tokens consumed while PREFILLING
 
     @property
     def live(self) -> bool:

@@ -1,15 +1,24 @@
 """Continuous-batching request scheduler over one live per-slot KV cache.
 
 The scheduler owns the cache, a FIFO admission queue, and ``layout.batch``
-slots.  Each engine step it (1) admits arrived requests into EMPTY slots via
-``engine.prefill_into_slot`` — a B=1 forward whose KV lands in exactly one
-batch row, (2) runs ONE batched ``serve_step`` for every slot (per-slot
-``cache["pos"]`` keeps staggered requests position-correct), and (3) evicts
-finished slots with ``kv_cache.reset_slot`` so the next queued request can
-take the row without touching live neighbors.
+slots.  Each engine step it (1) spends at most ``chunk_budget`` prompt
+tokens advancing ONE admitting request through the jitted, bucketed
+``ChunkedPrefill`` path (fixed-shape ``(1, C)`` chunks against the live
+cache, cache donated), (2) runs ONE batched ``serve_step`` for every
+DECODING slot (per-slot ``cache["pos"]`` keeps staggered requests
+position-correct), and (3) evicts finished slots with
+``kv_cache.reset_slot`` so the next queued request can take the row without
+touching live neighbors.  Interleaving (1) and (2) bounds how long a long
+prompt can stall in-flight decoders: never more than one chunk budget of
+prefill tokens runs between consecutive batched decode steps.
 
-Greedy sampling by default; pass ``sample_fn`` for anything richer.  The
-scheduler is deliberately host-side python around jitted device steps —
+``admission="eager"`` keeps the PR-2 behavior (one arbitrary-length B=1
+forward per prompt, decode stalls until it finishes) as the reference /
+benchmark baseline.
+
+Greedy sampling by default; pass ``sample_fn`` for anything richer, or set
+``Request.forced_tokens`` to teacher-force a response (serving oracles).
+The scheduler is deliberately host-side python around jitted device steps —
 the same split a production server uses (device graph static, scheduling
 dynamic).
 """
@@ -35,6 +44,14 @@ def greedy_sample(logits: np.ndarray) -> np.ndarray:
     return np.argmax(logits, axis=-1).astype(np.int32)
 
 
+def _percentiles(samples) -> Dict[str, Optional[float]]:
+    a = np.asarray(list(samples), np.float64)
+    if a.size == 0:
+        return {"p50": None, "p95": None}
+    return {"p50": round(float(np.percentile(a, 50)), 6),
+            "p95": round(float(np.percentile(a, 95)), 6)}
+
+
 class Scheduler:
     """Slot-level continuous batching on top of the MCBP serving engine."""
 
@@ -45,44 +62,73 @@ class Scheduler:
         layout: kvc.CacheLayout,
         rules: sh.ShardingRules = sh.ShardingRules(),
         sample_fn: Callable[[np.ndarray], np.ndarray] = greedy_sample,
+        admission: str = "chunked",
+        chunk_budget: int = 16,
+        buckets=None,
         prefill_kw: Optional[dict] = None,
+        record_logits: bool = False,
+        shared_fns: Optional[dict] = None,
     ):
         assert cfg.family in ("dense", "moe", "vlm"), (
             "the scheduler admits via transformer prefill; ssm/hybrid/enc-dec"
             " decode through make_serve_step directly (tests/test_serving.py)"
         )
+        assert admission in ("chunked", "eager"), admission
         self.params = params
         self.cfg = cfg
         self.layout = layout
         self.rules = rules
         self.sample_fn = sample_fn
-        self.prefill_kw = dict(prefill_kw or {})
+        self.admission = admission
+        self.chunk_budget = int(chunk_budget)
+        self.prefill_kw = dict(prefill_kw or {})  # eager-path forward kwargs
+        self.record_logits = record_logits
 
         self.cache = kvc.init_cache_arrays(cfg, layout)
         self.slots: List[Slot] = [Slot(i) for i in range(layout.batch)]
         self.queue: Deque[Request] = collections.deque()
-        self.serve_step = jax.jit(engine.make_serve_step(cfg, layout, rules))
-        # next-token feed per slot; EMPTY rows decode token 0 into garbage
-        # that per-slot valid masks keep invisible to live rows
+        if shared_fns is not None:
+            # reuse another scheduler's compiled steps (same cfg/layout/rules)
+            self.serve_step = shared_fns["serve_step"]
+            self.chunked = shared_fns.get("chunked")
+        else:
+            self.serve_step = jax.jit(engine.make_serve_step(cfg, layout, rules))
+            self.chunked = None
+        if admission == "chunked" and self.chunked is None:
+            # shared_fns came from an eager scheduler (or none given)
+            self.chunked = engine.ChunkedPrefill(
+                cfg, layout, rules,
+                buckets=buckets or engine.default_buckets(self.chunk_budget),
+            )
+        # next-token feed per slot; EMPTY/PREFILLING rows decode token 0 into
+        # garbage that per-slot valid masks + chunk overwrites keep invisible
         self.tokens = np.zeros((layout.batch, 1), np.int32)
 
         self.step_count = 0
         self.finished: List[Request] = []
-        self.occupancy: List[float] = []  # live slots / slots, per step
+        self.occupancy: List[float] = []  # busy slots / slots, per step
         self.decoded_tokens = 0
+        # audit trail for the chunk-budget contract: valid prompt tokens
+        # prefilled between this step's admission and its decode
+        self.prefill_tokens_per_step: List[int] = []
+
+    def shared_fns(self) -> dict:
+        """Compiled steps, reusable by another Scheduler on the same
+        (cfg, layout, rules) — e.g. an oracle's alone-runs."""
+        return {"serve_step": self.serve_step, "chunked": self.chunked}
 
     # ------------------------------------------------------------------
     # queue / admission
     # ------------------------------------------------------------------
 
     def submit(self, request: Request) -> None:
-        # reject oversized prompts at the API boundary: admission would
+        # reject malformed prompts at the API boundary: admission would
         # otherwise die mid-loop and take every in-flight request with it
-        if request.prompt_len >= self.layout.max_seq:
+        if not 0 < request.prompt_len < self.layout.max_seq:
             raise ValueError(
                 f"request {request.rid}: prompt_len {request.prompt_len} "
-                f"needs at least one decode slot below max_seq "
-                f"{self.layout.max_seq}"
+                f"must be >= 1 and leave at least one decode slot below "
+                f"max_seq {self.layout.max_seq}"
             )
         request.submit_time = time.perf_counter()
         self.queue.append(request)
@@ -98,8 +144,35 @@ class Scheduler:
                 return req
         return None
 
+    def _pick_token(self, req: Request, logits_row: np.ndarray) -> int:
+        """Next response token: forced (teacher-forced oracles) or sampled."""
+        t = len(req.generated)
+        if req.forced_tokens is not None and t < len(req.forced_tokens):
+            tok = int(req.forced_tokens[t])
+        else:
+            tok = int(self.sample_fn(logits_row[None])[0])
+        if self.record_logits:
+            if req.logit_rows is None:
+                req.logit_rows = []
+            req.logit_rows.append(np.asarray(logits_row, np.float32))
+        return tok
+
+    def _emit_first_token(self, slot: Slot, logits_row: np.ndarray) -> None:
+        req = slot.request
+        first = self._pick_token(req, logits_row)
+        req.generated.append(first)
+        now = time.perf_counter()
+        req.first_token_step = self.step_count
+        req.first_token_time = now
+        req.token_times.append(now)
+        self.tokens[slot.index, 0] = first
+        slot.state = SlotState.DECODING
+        if self._hit_limit(slot, req):
+            self._finish(slot)
+
     def admit(self) -> List[Request]:
-        """Fill EMPTY slots from the queue (FIFO among arrived requests)."""
+        """Eagerly fill EMPTY slots from the queue (FIFO among arrived):
+        one whole-prompt B=1 forward per request (``admission="eager"``)."""
         admitted = []
         for slot in self.slots:
             if slot.state is not SlotState.EMPTY:
@@ -109,21 +182,58 @@ class Scheduler:
                 break
             slot.state = SlotState.PREFILLING
             slot.request = req
+            req.admitted_step = self.step_count
+            req.admit_time = time.perf_counter()
             logits, self.cache = engine.prefill_into_slot(
                 self.params, self.cfg, self.layout, self.cache, slot.index,
                 jnp.asarray(req.prompt, jnp.int32), self.rules,
                 **self.prefill_kw,
             )
-            first = int(self.sample_fn(np.asarray(logits[:, -1]))[0])
-            req.generated.append(first)
+            self._emit_first_token(slot, np.asarray(logits[0, -1], np.float32))
+            admitted.append(req)
+        return admitted
+
+    def _advance_admission(self) -> int:
+        """Chunked admission: assign arrived requests to every EMPTY slot
+        (reserve the row + reset it — cheap, no token work), then spend at
+        most ``chunk_budget`` prompt tokens advancing the OLDEST admitting
+        request.  Exactly one prompt advances per step, so the budget is
+        also the bound on prefill tokens between consecutive batched decode
+        steps — the contract the chunk tests audit.  Returns the number of
+        prompt tokens consumed."""
+        for s in self.slots:
+            if s.state is not SlotState.EMPTY:
+                continue
+            req = self._next_arrived()
+            if req is None:
+                break
+            s.state = SlotState.PREFILLING
+            s.request = req
+            s.prefill_pos = 0
             req.admitted_step = self.step_count
             req.admit_time = time.perf_counter()
-            self.tokens[slot.index, 0] = first
-            slot.state = SlotState.DECODING
-            admitted.append(req)
-            if self._hit_limit(slot, req):
-                self._finish(slot)
-        return admitted
+            self.cache = self.chunked.reset(self.cache, s.index)
+        admitting = [s for s in self.slots if s.state is SlotState.PREFILLING]
+        if not admitting:
+            return 0
+        slot = min(admitting, key=lambda s: (s.request.admitted_step, s.index))
+        req = slot.request
+        spent = 0
+        logits, n = None, 0
+        while spent < self.chunk_budget and slot.prefill_pos < req.prompt_len:
+            take = min(req.prompt_len - slot.prefill_pos,
+                       self.chunk_budget - spent,
+                       self.chunked.buckets[-1])  # custom buckets < budget
+            logits, self.cache, n = self.chunked.run_chunk(
+                self.params, self.cache, slot.index,
+                req.prompt[slot.prefill_pos:slot.prefill_pos + take],
+                slot.prefill_pos,
+            )
+            slot.prefill_pos += n
+            spent += n
+        if slot.prefill_pos >= req.prompt_len:
+            self._emit_first_token(slot, np.asarray(logits[0, n - 1], np.float32))
+        return spent
 
     # ------------------------------------------------------------------
     # decode / eviction
@@ -147,36 +257,45 @@ class Scheduler:
         slot.state = SlotState.DONE
         self.finished.append(req)
         # eviction is logical only: the physical row reset (an O(cache)
-        # copy) happens once, at the next admission — prefill_into_slot
-        # always reset_slot's first, and per-slot valid masks keep the
+        # copy) happens once, at the next admission — both admission paths
+        # always reset_slot first, and per-slot valid masks keep the
         # stale row invisible to live neighbors in the meantime.  Call
         # kv_cache.reset_slot yourself to scrub a row eagerly.
         self.tokens[slot.index, 0] = 0
         slot.request = None
+        slot.prefill_pos = 0
         slot.state = SlotState.EMPTY
 
     def step(self) -> bool:
-        """Admit, run one batched decode step, harvest, evict.
+        """Admit/advance prefill, run one batched decode step, harvest,
+        evict.
 
         Returns False when there was nothing to do (no live slot and no
         admissible request) — the caller's idle/termination signal.
         """
-        self.admit()
+        if self.admission == "chunked":
+            spent = self._advance_admission()
+        else:
+            spent = sum(r.prompt_len for r in self.admit())
+        self.prefill_tokens_per_step.append(spent)
+        busy = [s for s in self.slots if s.live]
         live = [s for s in self.slots if s.state is SlotState.DECODING]
-        self.occupancy.append(len(live) / len(self.slots))
+        self.occupancy.append(len(busy) / len(self.slots))
         if not live:
             self.step_count += 1
-            return False
+            return bool(busy)  # prefill progress still counts as work
         logits, self.cache = self.serve_step(
             self.params, self.cache, jnp.asarray(self.tokens)
         )
-        nxt = self.sample_fn(np.asarray(logits[:, -1]))
+        rows = np.asarray(logits[:, -1], np.float32)
         self.step_count += 1
         self.decoded_tokens += len(live)
+        now = time.perf_counter()
         for slot in live:
             req = slot.request
-            tok = int(nxt[slot.index])
+            tok = self._pick_token(req, rows[slot.index])
             req.generated.append(tok)
+            req.token_times.append(now)
             self.tokens[slot.index, 0] = tok
             if self._hit_limit(slot, req):
                 self._finish(slot)
@@ -194,11 +313,21 @@ class Scheduler:
 
     def stats(self, wall_s: Optional[float] = None) -> Dict:
         occ = [o for o in self.occupancy if o > 0] or self.occupancy
+        gaps = np.concatenate(
+            [r.itl_gaps_s() for r in self.finished]
+        ) if self.finished else np.asarray([])
         out = {
+            "admission": self.admission,
             "finished_requests": len(self.finished),
             "decoded_tokens": self.decoded_tokens,
             "steps": self.step_count,
             "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
+            "max_prefill_tokens_per_step":
+                max(self.prefill_tokens_per_step, default=0),
+            "ttft_s": _percentiles(
+                r.ttft_s for r in self.finished if r.first_token_time > 0
+            ),
+            "itl_s": _percentiles(gaps),
             "requests": [r.trace_record() for r in self.finished],
         }
         if wall_s is not None:

@@ -1,0 +1,205 @@
+"""Chunked, bucketed prefill admission: exactness of chunk composition,
+the one-compile-per-bucket contract, and the scheduler's chunk-budget
+bound between batched decode steps."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serving import engine, kv_cache as kvc
+from repro.serving.request import Request, SlotState
+from repro.serving.scheduler import Scheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+MAX_SEQ = 64
+# off-bucket (5 pads into the 8-bucket), bucket-exact (16), > one chunk (21)
+PROMPT_LENS = (5, 16, 21)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def swa():
+    cfg = get_config("gemma3-4b", smoke=True)
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _compose_vs_whole(cfg, params, kv_format, s_prompt, rng):
+    """Returns (whole-prompt logits, composed logits, caches) for one prompt:
+    whole = a single fixed-shape chunk covering the prompt, composed = the
+    (8, 16) bucket walk."""
+    layout = kvc.layout_for(cfg, 2, MAX_SEQ, kv_format=kv_format)
+    prompt = rng.integers(0, cfg.vocab_size, (s_prompt,)).astype(np.int32)
+    whole = engine.ChunkedPrefill(cfg, layout, buckets=(32,))
+    lg_w, cache_w = whole.admit(
+        params, kvc.init_cache_arrays(cfg, layout), 1, prompt
+    )
+    comp = engine.ChunkedPrefill(cfg, layout, buckets=(8, 16))
+    lg_c, cache_c = comp.admit(
+        params, kvc.init_cache_arrays(cfg, layout), 1, prompt,
+        max_chunk=8,
+    )
+    return (np.asarray(lg_w, np.float32), np.asarray(lg_c, np.float32),
+            cache_w, cache_c, layout, prompt)
+
+
+def _assert_cache_equal(cache_a, cache_b):
+    for a, b in zip(jax.tree.leaves(cache_a), jax.tree.leaves(cache_b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestChunkComposition:
+    """Satellite: chunk composition must reproduce whole-prompt admission."""
+
+    @pytest.mark.parametrize("s_prompt", PROMPT_LENS)
+    def test_dense_bf16_bit_identical(self, dense, s_prompt, rng):
+        cfg, params = dense
+        lg_w, lg_c, cw, cc, _, _ = _compose_vs_whole(
+            cfg, params, "bf16", s_prompt, rng
+        )
+        assert np.array_equal(lg_w, lg_c), (
+            f"S={s_prompt}: chunk composition diverged "
+            f"(max |d| {np.max(np.abs(lg_w - lg_c))})"
+        )
+        _assert_cache_equal(cw, cc)
+
+    @pytest.mark.parametrize("s_prompt", PROMPT_LENS)
+    def test_swa_bf16_bit_identical(self, swa, s_prompt, rng):
+        # ring-buffered local layers: the gathered fixed-width window keeps
+        # lane placement chunking-invariant, so SWA is bit-exact too
+        cfg, params = swa
+        lg_w, lg_c, cw, cc, _, _ = _compose_vs_whole(
+            cfg, params, "bf16", s_prompt, rng
+        )
+        assert np.array_equal(lg_w, lg_c)
+        _assert_cache_equal(cw, cc)
+
+    def test_dense_int8_bit_identical(self, dense, rng):
+        # every key is read back from the quantized stack regardless of
+        # which chunk wrote it, so even int8 composition is bit-stable
+        cfg, params = dense
+        lg_w, lg_c, cw, cc, _, _ = _compose_vs_whole(cfg, params, "int8", 21, rng)
+        assert np.array_equal(lg_w, lg_c)
+        _assert_cache_equal(cw, cc)
+
+    def test_dense_bgpp_bit_identical(self, dense, rng):
+        cfg, params = dense
+        lg_w, lg_c, cw, cc, _, _ = _compose_vs_whole(cfg, params, "bgpp", 21, rng)
+        assert np.array_equal(lg_w, lg_c)
+        _assert_cache_equal(cw, cc)
+
+    def test_swa_int8_close(self, swa, rng):
+        # int8 rings hold quantized pre-chunk context while in-chunk keys
+        # are fresh, so composition differs from whole-prompt by bounded
+        # quantization noise (not bit-exact by construction)
+        cfg, params = swa
+        lg_w, lg_c, _, _, _, _ = _compose_vs_whole(cfg, params, "int8", 21, rng)
+        assert float(np.max(np.abs(lg_w - lg_c))) < 5e-2
+
+    @pytest.mark.parametrize("kv_format,atol", [("bf16", 1e-4), ("int8", 0.3)])
+    def test_matches_eager_reference(self, dense, kv_format, atol, rng):
+        """The jitted chunk path and the eager whole-prompt forward are the
+        same math up to blocked-softmax reassociation (bf16) and fresh-vs-
+        quantized prompt self-attention (int8)."""
+        cfg, params = dense
+        lg_w, _, cache_w, _, layout, prompt = _compose_vs_whole(
+            cfg, params, kv_format, 20, rng
+        )
+        lg_e, cache_e = engine.prefill_into_slot(
+            params, cfg, layout, kvc.init_cache_arrays(cfg, layout), 1,
+            jnp.asarray(prompt), block_q=8, block_k=8,
+        )
+        assert float(np.max(np.abs(lg_w - np.asarray(lg_e, np.float32)))) < atol
+        assert np.all(
+            np.asarray(cache_w["pos"]) == np.asarray(cache_e["pos"])
+        )
+
+
+class TestRecompileBound:
+    """Satellite: admitting many distinct prompt lengths compiles at most
+    once per configured bucket (the donate/bucketing contract)."""
+
+    def test_one_compile_per_bucket(self, dense, rng):
+        cfg, params = dense
+        layout = kvc.layout_for(cfg, 2, MAX_SEQ, kv_format="int8")
+        chunked = engine.ChunkedPrefill(cfg, layout, buckets=(4, 8, 16))
+        cache = kvc.init_cache_arrays(cfg, layout)
+        for s in range(1, 23):  # 22 distinct lengths, alternating slots
+            prompt = rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32)
+            _, cache = chunked.admit(params, cache, s % 2, prompt)
+        assert chunked.num_compiles <= len(chunked.buckets), (
+            f"{chunked.num_compiles} chunk compiles for buckets "
+            f"{chunked.buckets}"
+        )
+        assert chunked._reset._cache_size() == 1
+
+    def test_scheduler_compiles_bounded(self, dense, rng):
+        cfg, params = dense
+        layout = kvc.layout_for(cfg, 2, MAX_SEQ, kv_format="bf16")
+        sched = Scheduler(params, cfg, layout, admission="chunked",
+                          chunk_budget=8)
+        for rid, s in enumerate((3, 7, 8, 11, 15, 19)):
+            sched.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32),
+                max_new_tokens=2,
+            ))
+        sched.run(max_steps=500)
+        assert len(sched.finished) == 6
+        assert sched.chunked.num_compiles <= len(sched.chunked.buckets)
+
+
+class TestChunkBudgetContract:
+    """Acceptance: never more than chunk_budget prefill tokens between
+    consecutive batched decode steps, and in-flight decoders keep making
+    progress while a long prompt admits."""
+
+    def test_budget_and_decode_interleaving(self, dense, rng):
+        cfg, params = dense
+        layout = kvc.layout_for(cfg, 2, MAX_SEQ, kv_format="bf16")
+        budget = 4
+        sched = Scheduler(params, cfg, layout, admission="chunked",
+                          chunk_budget=budget)
+        short = Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size, (5,))
+            .astype(np.int32), max_new_tokens=6,
+        )
+        long = Request(
+            rid=1, prompt=rng.integers(0, cfg.vocab_size, (33,))
+            .astype(np.int32), max_new_tokens=2, arrival_step=2,
+        )
+        sched.submit(short)
+        sched.submit(long)
+        sched.run(max_steps=500)
+        assert len(sched.finished) == 2
+        assert max(sched.prefill_tokens_per_step) <= budget
+        # the 33-token prompt needs ceil(33/4) chunk steps; the short
+        # request must keep decoding through them, not stall
+        prefill_steps = long.first_token_step - long.admitted_step
+        assert prefill_steps >= 33 // budget
+        assert short.finished_step < long.first_token_step
+        assert all(s.state is SlotState.EMPTY for s in sched.slots)
+
+    def test_whole_prompt_budget_admits_in_one_step(self, dense, rng):
+        cfg, params = dense
+        layout = kvc.layout_for(cfg, 2, MAX_SEQ, kv_format="bf16")
+        sched = Scheduler(params, cfg, layout, admission="chunked",
+                          chunk_budget=32)
+        sched.submit(Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size, (20,))
+            .astype(np.int32), max_new_tokens=3,
+        ))
+        sched.run(max_steps=100)
+        (req,) = sched.finished
+        assert req.first_token_step == req.admitted_step

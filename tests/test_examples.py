@@ -39,7 +39,8 @@ class TestExamples:
             "examples/serve_llm.py", "--steps", "6", "--batch", "2",
             "--prompt-len", "16",
         ])
-        assert "decoded 6 steps" in out
+        assert "admission=chunked" in out
+        assert "ttft_s p50=" in out  # serving metrics are always reported
 
     def test_bgpp_example(self):
         out = run_example(["examples/bgpp_sparse_attention.py"])

@@ -1,0 +1,75 @@
+"""KV-cache container invariants: slot eviction must scrub EVERY store
+leaf of the slot row — k/v bodies, int8 scales, BGPP bit/sign planes, ring
+``abs_pos`` — without touching live neighbors."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.serving import kv_cache as kvc
+
+jax.config.update("jax_platform_name", "cpu")
+
+EXPECTED_LEAVES = {
+    "bf16": {"k", "v"},
+    "int8": {"k", "v", "k_scale", "v_scale"},
+    "bgpp": {"k_planes", "k_sign", "k_scale", "v", "v_scale"},
+}
+
+
+def _filled_cache(cfg, layout):
+    """Every leaf nonzero so a missed reset is visible."""
+    cache = kvc.init_cache_arrays(cfg, layout)
+    return jax.tree.map(lambda a: jnp.full_like(a, 3), cache)
+
+
+@pytest.mark.parametrize("fmt", ["bf16", "int8", "bgpp"])
+def test_reset_slot_clears_every_leaf(fmt):
+    # gemma3 has both a sliding-window ring stack and a global stack, so
+    # every store family of the format is exercised
+    cfg = get_config("gemma3-4b", smoke=True)
+    layout = kvc.layout_for(cfg, 3, 32, kv_format=fmt)
+    assert layout.local_layers and layout.global_layers
+    cache = _filled_cache(cfg, layout)
+
+    # the allocation actually contains the leaves this test claims to cover
+    assert set(cache["global"].keys()) == EXPECTED_LEAVES[fmt]
+    local_fmt = "int8" if fmt == "bgpp" else fmt
+    assert set(cache["local"].keys()) == EXPECTED_LEAVES[local_fmt] | {"abs_pos"}
+
+    slot = 1
+    cache = kvc.reset_slot(cache, layout, slot)
+
+    for stack in ("global", "local"):
+        for name, arr in cache[stack].items():
+            a = np.asarray(arr)
+            bdim = kvc._batch_dim(stack, name)
+            row = np.take(a, slot, axis=bdim)
+            fill = -1 if name == "abs_pos" else 0
+            assert np.all(row == fill), f"{stack}/{name}: slot row not cleared"
+            for other in (0, 2):  # live neighbors untouched (still 3)
+                keep = np.take(a, other, axis=bdim)
+                assert np.all(keep == 3), f"{stack}/{name}: slot {other} touched"
+    assert int(np.asarray(cache["pos"])[slot]) == 0
+    assert np.all(np.asarray(cache["pos"])[[0, 2]] == 3)
+
+
+def test_reset_slot_covers_mamba_and_cross():
+    cfg = get_config("whisper-medium", smoke=True)
+    layout = kvc.layout_for(cfg, 2, 16, kv_format="int8")
+    cache = _filled_cache(cfg, layout)
+    cache = kvc.reset_slot(cache, layout, 0)
+    for name in ("cross_k", "cross_v"):
+        a = np.asarray(cache[name])
+        assert np.all(a[:, 0] == 0) and np.all(a[:, 1] == 3)
+
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    layout = kvc.layout_for(cfg, 2, 16)
+    cache = _filled_cache(cfg, layout)
+    cache = kvc.reset_slot(cache, layout, 1)
+    for name in ("h", "conv"):
+        a = np.asarray(cache["mamba"][name])
+        assert np.all(a[:, 1] == 0) and np.all(a[:, 0] == 3)

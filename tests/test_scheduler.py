@@ -27,9 +27,9 @@ def served():
     return cfg, params
 
 
-def make_sched(cfg, params, slots=2, kv_format="int8"):
+def make_sched(cfg, params, slots=2, kv_format="int8", admission="chunked"):
     layout = kvc.layout_for(cfg, slots, MAX_SEQ, kv_format=kv_format)
-    return Scheduler(params, cfg, layout,
+    return Scheduler(params, cfg, layout, admission=admission, chunk_budget=8,
                      prefill_kw=dict(block_q=8, block_k=8))
 
 
@@ -98,6 +98,46 @@ class TestLifecycle:
         assert req.prompt_len + len(req.generated) - 1 <= MAX_SEQ
         assert len(req.generated) < 64
 
+    def test_rejects_malformed_prompts(self, served):
+        cfg, params = served
+        sched = make_sched(cfg, params, slots=1)
+        with pytest.raises(ValueError):  # empty prompt: no logits to sample
+            sched.submit(Request(rid=0, prompt=np.zeros((0,), np.int32),
+                                 max_new_tokens=2))
+        with pytest.raises(ValueError):  # no decode slot left below max_seq
+            sched.submit(Request(
+                rid=1, prompt=np.zeros((MAX_SEQ,), np.int32),
+                max_new_tokens=2))
+
+    def test_buckets_smaller_than_budget(self, served):
+        """Custom buckets below chunk_budget: admission chunks at the
+        largest bucket instead of overrunning it."""
+        cfg, params = served
+        rng = np.random.default_rng(7)
+        layout = kvc.layout_for(cfg, 1, MAX_SEQ, kv_format="int8")
+        sched = Scheduler(params, cfg, layout, admission="chunked",
+                          chunk_budget=16, buckets=(4,))
+        sched.submit(Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size, (9,))
+            .astype(np.int32), max_new_tokens=2))
+        sched.run(max_steps=100)
+        assert len(sched.finished) == 1
+        assert max(sched.prefill_tokens_per_step) <= 16
+
+    def test_chunked_from_eager_shared_fns(self, served):
+        """shared_fns from an eager scheduler lack a ChunkedPrefill; a
+        chunked scheduler must build its own instead of crashing."""
+        cfg, params = served
+        rng = np.random.default_rng(8)
+        eager = make_sched(cfg, params, slots=1, admission="eager")
+        sched = Scheduler(params, cfg, eager.layout, admission="chunked",
+                          chunk_budget=8, shared_fns=eager.shared_fns())
+        sched.submit(Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size, (10,))
+            .astype(np.int32), max_new_tokens=2))
+        sched.run(max_steps=100)
+        assert len(sched.finished) == 1
+
     def test_eos_stops_decode(self, served):
         cfg, params = served
         rng = np.random.default_rng(3)
@@ -118,8 +158,57 @@ class TestLifecycle:
         assert len(sched.finished[0].generated) < 16
 
 
+class TestEagerAdmission:
+    """The PR-2 whole-prompt admission path stays available as the
+    reference/baseline (``admission="eager"``)."""
+
+    def test_lifecycle_and_trace(self, served):
+        cfg, params = served
+        rng = np.random.default_rng(5)
+        sched = make_sched(cfg, params, slots=2, admission="eager")
+        for r in make_requests(cfg, 4, rng, max_new=3):
+            sched.submit(r)
+        stats = sched.run(max_steps=200)
+        assert stats["admission"] == "eager"
+        assert stats["finished_requests"] == 4
+        # eager admission spends whole prompts in one step — the budget
+        # audit records it (that's exactly what chunked admission bounds)
+        assert stats["max_prefill_tokens_per_step"] >= 6
+        json.dumps(stats)
+
+    def test_matches_chunked_admission_logits(self, served):
+        """Chunked and eager admission are different prefill numerics of
+        the same math: teacher-forced per-token logits must agree tightly
+        (bf16, no greedy compounding)."""
+        cfg, params = served
+        rng = np.random.default_rng(6)
+        reqs = [
+            (rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32),
+             rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32))
+            for n in (9, 14)
+        ]
+
+        def run(admission):
+            sched = make_sched(cfg, params, slots=2, kv_format="bf16",
+                               admission=admission)
+            sched.record_logits = True
+            for rid, (prompt, forced) in enumerate(reqs):
+                sched.submit(Request(rid=rid, prompt=prompt,
+                                     max_new_tokens=4, arrival_step=rid,
+                                     forced_tokens=forced))
+            sched.run(max_steps=100)
+            return {r.rid: r.logit_rows for r in sched.finished}
+
+        chunked, eager = run("chunked"), run("eager")
+        for rid in chunked:
+            for t, (g, e) in enumerate(zip(chunked[rid], eager[rid])):
+                err = float(np.max(np.abs(g - e)))
+                assert err < 5e-3, f"rid {rid} token {t}: |d|={err}"
+
+
 class TestSlotIsolation:
-    def test_concurrent_greedy_matches_alone(self, served):
+    @pytest.mark.parametrize("admission", ["chunked", "eager"])
+    def test_concurrent_greedy_matches_alone(self, served, admission):
         """Greedy decodes of a request must be identical whether it shares
         the batch with others (incl. slot reuse after eviction) or runs
         with every other slot EMPTY."""
@@ -130,8 +219,15 @@ class TestSlotIsolation:
             for n in (9, 13, 7)
         ]
 
+        shared = {}
+
         def run(selected):
-            sched = make_sched(cfg, params, slots=2, kv_format="bf16")
+            sched = make_sched(cfg, params, slots=2, kv_format="bf16",
+                               admission=admission)
+            if shared:
+                sched.serve_step = shared["serve_step"]
+                sched.chunked = shared["chunked"]
+            shared.update(sched.shared_fns())
             for i in selected:
                 sched.submit(Request(rid=i, prompt=prompts[i],
                                      max_new_tokens=5, arrival_step=2 * i))
