@@ -1,10 +1,12 @@
 """Serving throughput: chunked vs eager admission vs lockstep decode under a
-Poisson-ish arrival trace, for the three KV formats (bf16 / int8 / bgpp).
+Poisson-ish arrival trace, for the three KV formats (bf16 / int8 / bgpp),
+plus the paged KV cache under a shared-system-prompt trace.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py \\
         [--arch phi4-mini-3.8b] [--slots 2] [--requests 6] [--seed 0] \\
         [--kv-formats bf16,int8,bgpp] [--chunk-budget 8] [--quick] \\
-        [--out BENCH_serving.json]
+        [--page-size 8] [--shared-prefix 16] \\
+        [--baseline BENCH_serving.json] [--out BENCH_serving.json]
 
 All runtimes drive the SAME jitted serve_step and the same seeded request
 trace (staggered arrivals, varying prompt lengths and decode budgets):
@@ -27,10 +29,22 @@ queue waits.  Runs on CPU via interpret-mode kernel dispatch
 (auto-detected off-TPU).  CSV on stdout per the benchmark contract;
 ``--out`` writes the JSON consumed as the BENCH_serving baseline.
 
+  paged    — the chunked scheduler on the paged KV layout (pooled pages +
+             page table + hash-based prefix reuse), driven by a trace whose
+             requests share a ``--shared-prefix``-token system prompt.
+             Reports prefix-hit rate and peak resident KV bytes next to the
+             slot layout's dense allocation for the same traffic.
+
 ``--quick`` runs one format with chunked+eager only and exits nonzero if
 chunked admission shows lower occupancy than eager OR a worse decode-tail
 ITL p95 (the stall chunking exists to remove) — the CI regression gate
-for the admission path.
+for the admission path.  ``--baseline`` (usually the committed
+BENCH_serving.json) tightens the gate against the recorded numbers with
+stated tolerances: chunked occupancy may not drop more than
+``OCC_TOLERANCE`` (absolute — occupancy is step-deterministic), and the
+chunked/eager decode-tail ITL p95 *ratio* may not exceed the baseline's
+ratio by more than ``ITL_RATIO_FACTOR``x (a ratio, so CI-runner speed
+cancels out).
 """
 
 from __future__ import annotations
@@ -59,6 +73,11 @@ from repro.serving.request import poisson_trace  # noqa: E402
 from repro.serving.scheduler import Scheduler  # noqa: E402
 
 
+# stated regression-gate tolerances (--baseline):
+OCC_TOLERANCE = 0.02  # absolute mean-occupancy drop allowed vs baseline
+ITL_RATIO_FACTOR = 4.0  # chunked/eager itl_p95 ratio growth allowed
+
+
 def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
                   shared=None):
     sched = Scheduler(params, cfg, layout, admission=admission,
@@ -71,7 +90,7 @@ def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
     sched.run(max_steps=10_000)
     wall = time.perf_counter() - t0
     stats = sched.stats(wall)
-    return {
+    out = {
         "tokens_per_s": stats["tokens_per_s"],
         "mean_occupancy": stats["mean_occupancy"],
         "decoded_tokens": stats["decoded_tokens"],
@@ -83,7 +102,16 @@ def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
         "max_prefill_tokens_per_step": stats["max_prefill_tokens_per_step"],
         "mean_queue_wait_steps": float(np.mean(
             [r["queue_wait_steps"] for r in stats["requests"]])),
-    }, sched.shared_fns()
+    }
+    if "paged" in stats:
+        pg = stats["paged"]
+        out |= {
+            "prefix_hit_rate": pg["prefix_hit_rate"],
+            "prefix_hit_tokens": pg["prefix_hit_tokens"],
+            "resident_kv_bytes_peak": pg["resident_kv_bytes_peak"],
+            "slot_resident_kv_bytes": pg["slot_resident_kv_bytes"],
+        }
+    return out, sched.shared_fns()
 
 
 def run_lockstep(params, cfg, layout, reqs, serve_step=None):
@@ -147,8 +175,16 @@ def main():
     ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-formats", default="bf16,int8,bgpp")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page for the paged runtime")
+    ap.add_argument("--shared-prefix", type=int, default=16,
+                    help="shared system-prompt tokens in the paged trace")
     ap.add_argument("--quick", action="store_true",
                     help="one format, chunked+eager only — the CI gate")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH JSON to gate regressions against "
+                         f"(occupancy -{OCC_TOLERANCE} absolute, itl-p95 "
+                         f"ratio x{ITL_RATIO_FACTOR})")
     ap.add_argument("--out", default=None,
                     help="write the JSON baseline (e.g. BENCH_serving.json)")
     args = ap.parse_args()
@@ -157,8 +193,9 @@ def main():
     params, _ = model_zoo.init(jax.random.key(0), cfg)
     formats = args.kv_formats.split(",")
     if args.quick:
+        # one format, but the SAME trace parameters as the full run, so the
+        # --baseline gate compares like for like
         formats = formats[:1]
-        args.requests = min(args.requests, 4)
 
     results = {"config": vars(args) | {"arch_resolved": cfg.name}}
     emit_header()
@@ -220,8 +257,69 @@ def main():
         if "lockstep" in entry and entry["occupancy_gain"] <= 0:
             ok = False
 
-    print(f"# chunked >= eager occupancy, chunked itl_p95 <= eager "
-          f"(and eager > lockstep occupancy) on every format: {ok}")
+        if not args.quick:
+            # paged layout under a shared-system-prompt trace: later
+            # requests must adopt the resident prompt pages (hit rate > 0)
+            # and the pool must stay under the slot layout's dense rows
+            rng = np.random.default_rng(args.seed)
+            p_max_prompt = min(23, args.max_seq - 2 - args.shared_prefix)
+            assert p_max_prompt >= 1, "--shared-prefix leaves no prompt room"
+            preqs = poisson_trace(rng, args.requests, cfg.vocab_size,
+                                  args.max_new, arrival_rate=3.0,
+                                  min_new=max(2, args.max_new // 3),
+                                  max_prompt=p_max_prompt,
+                                  shared_prefix=args.shared_prefix)
+            layout_p = kvc.layout_for(cfg, args.slots, args.max_seq,
+                                      kv_format=fmt, layout="paged",
+                                      page_size=args.page_size)
+            entry["paged"], _ = run_scheduler(
+                params, cfg, layout_p, preqs, "chunked", args.chunk_budget,
+            )
+            r = entry["paged"]
+            us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
+            emit(f"serving_{fmt}_paged", us,
+                 f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
+                 f";prefix_hit_rate={r['prefix_hit_rate']}"
+                 f";resident_kv_peak={r['resident_kv_bytes_peak']}"
+                 f";slot_resident={r['slot_resident_kv_bytes']}")
+            print(f"# {fmt}: paged prefix hit rate "
+                  f"{r['prefix_hit_rate']:.3f}, resident KV peak "
+                  f"{r['resident_kv_bytes_peak']} B vs slot "
+                  f"{r['slot_resident_kv_bytes']} B")
+            if r["prefix_hit_rate"] <= 0:
+                ok = False
+            if r["resident_kv_bytes_peak"] >= r["slot_resident_kv_bytes"]:
+                ok = False
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        for fmt in formats:
+            if fmt not in base:
+                print(f"# baseline has no {fmt} entry; skipping gate")
+                continue
+            b, cur = base[fmt], results[fmt]
+            occ_b = b["chunked"]["mean_occupancy"]
+            occ_c = cur["chunked"]["mean_occupancy"]
+            if occ_c < occ_b - OCC_TOLERANCE:
+                print(f"# REGRESSION {fmt}: chunked occupancy {occ_c:.3f} "
+                      f"< baseline {occ_b:.3f} - {OCC_TOLERANCE}")
+                ok = False
+
+            def _ratio(e):
+                c, g = e["chunked"]["itl_s_p95"], e["eager"]["itl_s_p95"]
+                return c / g if c and g else None
+
+            rb, rc = _ratio(b), _ratio(cur)
+            if rb is not None and rc is not None \
+                    and rc > max(rb, 1.0) * ITL_RATIO_FACTOR:
+                print(f"# REGRESSION {fmt}: chunked/eager itl_p95 ratio "
+                      f"{rc:.3f} > baseline {rb:.3f} x {ITL_RATIO_FACTOR}")
+                ok = False
+
+    print(f"# chunked >= eager occupancy, chunked itl_p95 <= eager, paged "
+          f"prefix reuse + resident-KV win"
+          f"{', baseline gate' if args.baseline else ''}: {ok}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)

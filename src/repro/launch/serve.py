@@ -4,6 +4,7 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \\
         --kv-format int8 --requests 8 --slots 4 --seed 0 \\
         [--admission chunked|eager] [--chunk-budget 16] \\
+        [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16] \\
         [--trace-out trace.json] [--data 1 --model 1]
 
 Requests arrive on a Poisson-ish trace with distinct prompt lengths and
@@ -12,7 +13,11 @@ feeds each arriving prompt through fixed-shape, bucketed prefill chunks
 (jitted once per bucket, cache donated) interleaved with the batched decode
 step, so a long prompt never stalls in-flight decoders for more than
 ``--chunk-budget`` prefill tokens; ``--admission eager`` keeps the
-whole-prompt B=1 admission as the reference baseline.  ``--trace-out``
+whole-prompt B=1 admission as the reference baseline.  ``--kv-layout
+paged`` swaps the dense per-slot KV rows for pooled pages behind a page
+table (host allocator with refcounts): requests sharing a system prompt
+(``--shared-prefix``) reuse each other's resident prompt pages instead of
+re-prefilling them, bit-identically to the slot layout.  ``--trace-out``
 dumps per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
 throughput as JSON so runs are reproducible (``--seed``) and comparable
 across PRs.
@@ -43,6 +48,14 @@ def main():
                     default="phi4-mini-3.8b")
     ap.add_argument("--kv-format", default="int8",
                     choices=["bf16", "int8", "bgpp"])
+    ap.add_argument("--kv-layout", default="slot", choices=["slot", "paged"],
+                    help="paged: pooled KV pages + per-slot page table with "
+                         "hash-based prefix reuse (bit-identical to slot)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens to "
+                         "every request (exercises paged prefix reuse)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
@@ -74,14 +87,18 @@ def main():
     params, _ = model_zoo.init(jax.random.key(0), cfg)
 
     layout = kvc.layout_for(cfg, args.slots, args.max_seq,
-                            kv_format=args.kv_format)
+                            kv_format=args.kv_format,
+                            layout=args.kv_layout, page_size=args.page_size)
     sched = Scheduler(params, cfg, layout, rules,
                       admission=args.admission,
                       chunk_budget=args.chunk_budget,
                       prefill_kw=dict(block_q=16, block_k=32))
+    max_prompt = min(23, args.max_seq - 2 - args.shared_prefix)
+    assert max_prompt >= 1, "--shared-prefix leaves no room for prompts"
     for req in poisson_trace(rng, args.requests, cfg.vocab_size,
                              args.max_new, args.arrival_rate,
-                             max_prompt=min(23, args.max_seq - 2)):
+                             max_prompt=max_prompt,
+                             shared_prefix=args.shared_prefix):
         sched.submit(req)
 
     t0 = time.perf_counter()
@@ -107,9 +124,17 @@ def main():
           f"p95={stats['ttft_s']['p95']}  "
           f"itl_s p50={stats['itl_s']['p50']} p95={stats['itl_s']['p95']}  "
           f"max prefill tokens/step={stats['max_prefill_tokens_per_step']}")
+    if "paged" in stats:
+        pg = stats["paged"]
+        print(f"[serve] paged: prefix hit rate {pg['prefix_hit_rate']:.3f} "
+              f"({pg['prefix_hit_tokens']} tokens over {pg['prefix_hits']} "
+              f"hits), resident KV peak {pg['resident_kv_bytes_peak']/1e3:.1f}"
+              f" kB vs {pg['slot_resident_kv_bytes']/1e3:.1f} kB slot-dense")
     if args.trace_out:
         stats["config"] = {
             "arch": cfg.name, "kv_format": args.kv_format,
+            "kv_layout": args.kv_layout, "page_size": args.page_size,
+            "shared_prefix": args.shared_prefix,
             "slots": args.slots, "max_seq": args.max_seq,
             "requests": args.requests, "max_new": args.max_new,
             "admission": args.admission, "chunk_budget": args.chunk_budget,

@@ -217,12 +217,22 @@ def _bgpp_decode_attend(q, entry, valid, cfg):
 # --------------------------------------------------------------------------
 
 
-def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules):
+def _paged_kw(layout):
+    return dict(page_size=layout.page_size, max_seq=layout.max_seq)
+
+
+def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
+                       phys=None):
     """x: (B, 1, D), pos: per-slot (B,) int32.  Returns (out (B,1,D), cache).
 
     Every batch row carries its own position: RoPE angles, the KV write
     target, and the causal/window valid mask are all computed per slot, so
     requests admitted at different times decode together in one batch.
+
+    ``phys`` (paged layouts): the precomputed ``(B, S_max)`` logical->pool
+    gather map — global writes translate through the page table and the
+    attend consumes the gathered heads-major view, which holds exactly the
+    slot layout's values (bit-identical decode).
     """
     B = x.shape[0]
     fmt = layout.kv_format
@@ -253,10 +263,17 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules):
         out = _decode_attend(q[:, 0], entry, valid, cfg, fmt_l)
     else:
         gi = layout.global_layers.index(layer_idx)
-        cache["global"] = kvc.write_token(cache["global"], gi, k, v, pos)
-        store = cache["global"]
+        if layout.layout == "paged":
+            cache["global"] = kvc.write_token(
+                cache["global"], gi, k, v, pos,
+                page_table=cache["page_table"], **_paged_kw(layout),
+            )
+            entry = kvc.paged_entry(cache["global"], gi, phys)
+        else:
+            cache["global"] = kvc.write_token(cache["global"], gi, k, v, pos)
+            store = cache["global"]
+            entry = {n: store[n][gi] for n in store}
         valid = jnp.arange(layout.max_seq)[None, :] <= pos_c  # (B, S)
-        entry = {n: store[n][gi] for n in store}
         if fmt == "bgpp":
             out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
         else:
@@ -332,6 +349,10 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     def serve_step(params, cache, tokens):
         pos = cache["pos"]  # per-slot (B,) int32 positions
         B = tokens.shape[0]
+        # paged: one logical->pool gather map serves every global layer
+        phys = kvc.phys_table(
+            cache["page_table"], layout.page_size, layout.max_seq
+        ) if layout.layout == "paged" and layout.global_layers else None
         x = params["embed"][tokens[:, :1]].astype(dtype)
         if cfg.embed_scale:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
@@ -341,7 +362,8 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
             for i in range(cfg.num_layers):
                 p = jax.tree.map(lambda a: a[i], params["layers"])
                 a, cache = _attn_decode_layer(
-                    p, cfg, layout, cache, x, pos, i, float(thetas[i]), rules
+                    p, cfg, layout, cache, x, pos, i, float(thetas[i]), rules,
+                    phys=phys,
                 )
                 x = x + a
                 x = x + _ffn_decode_layer(p, cfg, x, rules)
@@ -361,7 +383,8 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
                 if cfg.layer_is_attention(i):
                     pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
                     a, cache = _attn_decode_layer(
-                        pa, cfg, layout, cache, x, pos, i, cfg.rope_theta, rules
+                        pa, cfg, layout, cache, x, pos, i, cfg.rope_theta,
+                        rules, phys=phys,
                     )
                     x = x + a
                 else:
@@ -374,7 +397,8 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
                 p = jax.tree.map(lambda a: a[i], params["decoder"])
                 pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
                 a, cache = _attn_decode_layer(
-                    pa, cfg, layout, cache, x, pos, i, cfg.rope_theta, rules
+                    pa, cfg, layout, cache, x, pos, i, cfg.rope_theta, rules,
+                    phys=phys,
                 )
                 x = x + a
                 # cross attention over the (precomputed) encoder memory
@@ -426,9 +450,15 @@ def prefill(params, cfg, layout: kvc.CacheLayout, tokens, rules=sh.ShardingRules
     cache, _ = kvc.init_cache(cfg, layout)
     B, S = tokens.shape
 
+    paged_kw = {}
+    if layout.layout == "paged":
+        # whole-batch prefill maps every slot's row slot-major (no
+        # allocator in the loop); the scheduler path syncs its own table
+        cache["page_table"] = kvc.identity_page_table(layout)
+        paged_kw = dict(page_table=cache["page_table"], **_paged_kw(layout))
     for gi, layer in enumerate(layout.global_layers):
         cache["global"] = kvc.write_prefill(
-            cache["global"], gi, k_all[layer], v_all[layer]
+            cache["global"], gi, k_all[layer], v_all[layer], **paged_kw
         )
     for li, layer in enumerate(layout.local_layers):
         cache["local"] = kvc.write_prefill_local(
@@ -454,6 +484,10 @@ def prefill_into_slot(params, cfg, layout: kvc.CacheLayout, cache, slot: int,
     fills the cache leaves no index for the first decoded token's KV —
     out-of-bounds scatters drop silently, corrupting logits).
 
+    Paged layouts: the caller must have mapped pages covering ``[0, S)``
+    of the slot's row in ``cache["page_table"]`` first (the scheduler's
+    ``PageAllocator.ensure_range``) — writes through unmapped pages drop.
+
     This is the *eager reference* admission path: one arbitrary-length
     forward per prompt, recompiling per length and copying the stacked
     store per layer.  Production admission is :class:`ChunkedPrefill` —
@@ -472,9 +506,13 @@ def prefill_into_slot(params, cfg, layout: kvc.CacheLayout, cache, slot: int,
         params, cfg, tokens, rules, return_kv=True, **fw_kw
     )
     cache = kvc.reset_slot(cache, layout, slot)
+    paged_kw = dict(
+        page_table=cache["page_table"], **_paged_kw(layout)
+    ) if layout.layout == "paged" else {}
     for gi, layer in enumerate(layout.global_layers):
         cache["global"] = kvc.write_prefill(
-            cache["global"], gi, k_all[layer], v_all[layer], slot=slot
+            cache["global"], gi, k_all[layer], v_all[layer], slot=slot,
+            **paged_kw
         )
     for li, layer in enumerate(layout.local_layers):
         cache["local"] = kvc.write_prefill_local(
@@ -565,8 +603,10 @@ def _chunk_attend_local(cfg, layout, store, li, slot, q, k, v, qpos, offset,
 
 
 def _attn_chunk_layer(p, cfg, layout, cache, x, slot, offset, length,
-                      layer_idx, theta, rules):
-    """One attention layer of the chunk forward.  x: (1, C, D)."""
+                      layer_idx, theta, rules, phys=None):
+    """One attention layer of the chunk forward.  x: (1, C, D).
+    ``phys`` (paged): the slot's ``(1, S_max)`` logical->pool gather map,
+    hoisted once per chunk step."""
     B, C, _ = x.shape
     fmt = layout.kv_format
     h = layers.apply_norm(x, p["attn_norm"], cfg.norm) if "attn_norm" in p else x
@@ -591,29 +631,41 @@ def _attn_chunk_layer(p, cfg, layout, cache, x, slot, offset, length,
         gi = layout.global_layers.index(layer_idx)
         # write first: chunk keys are read back from the stack, keeping the
         # key axis (S_max,) for every bucket width
-        cache["global"] = kvc.write_prefill(
-            cache["global"], gi, k, v, slot=slot, offset=offset, length=length,
-        )
-        store = cache["global"]
+        if layout.layout == "paged":
+            cache["global"] = kvc.write_prefill(
+                cache["global"], gi, k, v, slot=slot, offset=offset,
+                length=length, page_table=cache["page_table"],
+                **_paged_kw(layout),
+            )
+            view = kvc.paged_entry(cache["global"], gi, phys)
+        else:
+            cache["global"] = kvc.write_prefill(
+                cache["global"], gi, k, v, slot=slot, offset=offset,
+                length=length,
+            )
+            store = cache["global"]
+            view = {
+                n: (store[n][gi][:, slot][:, None] if n == "k_planes"
+                    else store[n][gi, slot][None])
+                for n in store
+            }
         S = layout.max_seq
         valid = (jnp.arange(S)[None, :] <= qpos[:, None])[None]  # (1, C, S)
         if fmt == "bgpp":
             # prefill attends the full causal context: reconstruct the exact
             # int8 K from the bit planes (BGPP's progressive prediction is a
             # decode-time saving; there is nothing to skip at prefill)
-            planes = store["k_planes"][gi][:, slot][:, None]
             entry = {
                 "k": kvc.bitplanes_to_k(
-                    planes, store["k_sign"][gi, slot][None]
+                    view["k_planes"], view["k_sign"]
                 ).astype(jnp.int8),
-                "k_scale": store["k_scale"][gi, slot][None],
-                "v": store["v"][gi, slot][None],
-                "v_scale": store["v_scale"][gi, slot][None],
+                "k_scale": view["k_scale"],
+                "v": view["v"],
+                "v_scale": view["v_scale"],
             }
             out = _cache_attend(q, entry, valid, cfg, "int8")
         else:
-            entry = {n: store[n][gi, slot][None] for n in store}
-            out = _cache_attend(q, entry, valid, cfg, fmt)
+            out = _cache_attend(q, view, valid, cfg, fmt)
 
     out = out.astype(x.dtype).reshape(B, C, -1) @ p["attn"]["wo"]
     if cfg.post_norms and "post_attn_norm" in p:
@@ -642,6 +694,14 @@ def make_prefill_chunk(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     thetas = transformer.layer_thetas(cfg)
 
     def prefill_chunk(params, cache, tokens, slot, offset, length):
+        # paged: this slot's logical->pool gather row, hoisted once for
+        # every global layer (the serve_step pattern)
+        phys = jnp.take(
+            kvc.phys_table(
+                cache["page_table"], layout.page_size, layout.max_seq
+            ),
+            slot, axis=0,
+        )[None] if layout.layout == "paged" and layout.global_layers else None
         x = params["embed"][tokens].astype(dtype)
         if cfg.embed_scale:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
@@ -650,7 +710,7 @@ def make_prefill_chunk(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
             p = jax.tree.map(lambda a: a[i], params["layers"])
             a, cache = _attn_chunk_layer(
                 p, cfg, layout, cache, x, slot, offset, length, i,
-                float(thetas[i]), rules,
+                float(thetas[i]), rules, phys=phys,
             )
             x = x + a
             # dropless MoE (capacity_factor=E): padded garbage lanes can

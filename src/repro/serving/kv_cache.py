@@ -14,6 +14,23 @@ keep two stacks: local layers get a ring buffer of ``window`` slots, global
 layers the full sequence — this is what makes gemma3/llama4 ``long_500k``
 memory-feasible.  Logical-axis specs accompany every array so the dry-run
 can shard caches ((pod,)data over batch, or sequence for long_500k).
+
+Two physical layouts for the *global* stacks (``CacheLayout.layout``):
+
+  slot  — one dense ``(B, S_max)`` row per batch slot (the default; every
+          oracle baseline).
+  paged — vLLM-style pools: each layer stores ``num_pages * page_size``
+          token rows with no batch dim, and a per-slot page table
+          ``(B, S_max // page_size)`` of physical page ids maps logical
+          positions to pool rows.  Writes translate logical → physical with
+          the same OOB-scatter-drop convention (unmapped page or padded
+          lane => dropped); reads gather the slot's logical row back into
+          the exact heads-major view the slot layout serves, so attention
+          consumes bit-identical values (verified by the serving fuzz
+          oracle).  Page lifecycle (free lists, refcounts, prefix reuse)
+          is host-side: :mod:`repro.serving.paging`.  Local ring stacks,
+          mamba state, and cross memory stay slot-major — rings are
+          already fixed-width per-slot pages by construction.
 """
 
 from __future__ import annotations
@@ -54,9 +71,19 @@ class CacheLayout:
     local_window: int = 0
     mamba_layers: Tuple[int, ...] = ()
     has_cross: bool = False  # whisper encoder memory
+    layout: str = "slot"  # slot | paged (global stacks only)
+    page_size: int = 0  # tokens per page (paged layout)
+    num_pages: int = 0  # physical pages in each layer's pool (paged layout)
+
+    @property
+    def pages_per_slot(self) -> int:
+        """Logical pages needed to map one slot's full ``max_seq`` row."""
+        return -(-self.max_seq // self.page_size) if self.page_size else 0
 
 
-def layout_for(cfg, batch: int, max_seq: int, kv_format: str = "int8") -> CacheLayout:
+def layout_for(cfg, batch: int, max_seq: int, kv_format: str = "int8",
+               layout: str = "slot", page_size: int = 8,
+               num_pages: Optional[int] = None) -> CacheLayout:
     glob, loc, mamba = [], [], []
     window = 0
     for i in range(cfg.num_layers):
@@ -73,6 +100,15 @@ def layout_for(cfg, batch: int, max_seq: int, kv_format: str = "int8") -> CacheL
             window = w
         else:
             glob.append(i)
+    assert layout in ("slot", "paged"), layout
+    if layout == "paged":
+        assert page_size >= 1, "paged layout needs page_size >= 1"
+        pages_per_slot = -(-max_seq // page_size)
+        # default capacity == the dense allocation, so admission can never
+        # exhaust the pool; smaller pools oversubscribe (prefix sharing)
+        num_pages = batch * pages_per_slot if num_pages is None else num_pages
+    else:
+        page_size, num_pages = 0, 0
     return CacheLayout(
         arch=cfg.name,
         family=cfg.family,
@@ -84,6 +120,9 @@ def layout_for(cfg, batch: int, max_seq: int, kv_format: str = "int8") -> CacheL
         local_window=min(window, max_seq) if window else 0,
         mamba_layers=tuple(mamba),
         has_cross=cfg.family == "enc_dec",
+        layout=layout,
+        page_size=page_size,
+        num_pages=num_pages,
     )
 
 
@@ -118,6 +157,58 @@ def _kv_stack(n_layers, B, S, Hk, Dh, kv_format, dtype):
     return p
 
 
+def _kv_pool(n_layers, n_tok, Hk, Dh, kv_format, dtype):
+    """Paged pool: token-major ``(L, n_tok, Hk, ...)`` per-layer stores with
+    NO batch dim — ``n_tok = num_pages * page_size`` physical rows shared by
+    every slot through the page table.  Token-major (vs the slot layout's
+    heads-major) lets page gathers/scatters address one contiguous row
+    axis; reads restore the heads-major view (:func:`paged_entry`)."""
+    p: Tree = {}
+    if n_layers == 0:
+        return p
+    if kv_format == "bf16":
+        p["k"] = jnp.zeros((n_layers, n_tok, Hk, Dh), dtype)
+        p["v"] = jnp.zeros((n_layers, n_tok, Hk, Dh), dtype)
+    elif kv_format == "int8":
+        for n in ("k", "v"):
+            p[n] = jnp.zeros((n_layers, n_tok, Hk, Dh), jnp.int8)
+            p[f"{n}_scale"] = jnp.zeros((n_layers, n_tok, Hk), jnp.float32)
+    elif kv_format == "bgpp":
+        assert Dh % 8 == 0
+        p["k_planes"] = jnp.zeros((n_layers, NBITS, n_tok, Hk, Dh // 8), jnp.uint8)
+        p["k_sign"] = jnp.zeros((n_layers, n_tok, Hk, Dh // 8), jnp.uint8)
+        p["k_scale"] = jnp.zeros((n_layers, n_tok, Hk), jnp.float32)
+        p["v"] = jnp.zeros((n_layers, n_tok, Hk, Dh), jnp.int8)
+        p["v_scale"] = jnp.zeros((n_layers, n_tok, Hk), jnp.float32)
+    else:
+        raise ValueError(kv_format)
+    return p
+
+
+def _kv_pool_specs(kv_format):
+    # pool token rows are randomly assigned to slots, so neither BATCH nor
+    # SEQ sharding applies to the token axis; heads-shard only.  The page
+    # table itself shards over batch.
+    if kv_format == "bf16":
+        ax = (sh.LAYERS, None, sh.KV_HEADS, None)
+        return {"k": ax, "v": ax}
+    if kv_format == "int8":
+        s = {}
+        for n in ("k", "v"):
+            s[n] = (sh.LAYERS, None, sh.KV_HEADS, None)
+            s[f"{n}_scale"] = (sh.LAYERS, None, sh.KV_HEADS)
+        return s
+    if kv_format == "bgpp":
+        return {
+            "k_planes": (sh.LAYERS, None, None, sh.KV_HEADS, None),
+            "k_sign": (sh.LAYERS, None, sh.KV_HEADS, None),
+            "k_scale": (sh.LAYERS, None, sh.KV_HEADS),
+            "v": (sh.LAYERS, None, sh.KV_HEADS, None),
+            "v_scale": (sh.LAYERS, None, sh.KV_HEADS),
+        }
+    raise ValueError(kv_format)
+
+
 def _kv_stack_specs(kv_format):
     if kv_format == "bf16":
         ax = (sh.LAYERS, sh.BATCH, sh.KV_HEADS, sh.SEQ, None)
@@ -149,7 +240,11 @@ def cache_specs(cfg, layout: CacheLayout) -> Tree:
     """Logical-axis specs for the cache — pure (no allocation, dry-run path)."""
     specs: Tree = {"pos": (sh.BATCH,)}
     if layout.global_layers:
-        specs["global"] = _kv_stack_specs(layout.kv_format)
+        if layout.layout == "paged":
+            specs["global"] = _kv_pool_specs(layout.kv_format)
+            specs["page_table"] = (sh.BATCH, None)
+        else:
+            specs["global"] = _kv_stack_specs(layout.kv_format)
     if layout.local_layers:
         fmt = "int8" if layout.kv_format == "bgpp" else layout.kv_format
         s = _kv_stack_specs(fmt)
@@ -174,10 +269,21 @@ def init_cache_arrays(cfg, layout: CacheLayout) -> Tree:
     # so requests of different lengths can coexist (continuous batching)
     cache: Tree = {"pos": jnp.zeros((B,), jnp.int32)}
     if layout.global_layers:
-        cache["global"] = _kv_stack(
-            len(layout.global_layers), B, S, cfg.num_kv_heads, cfg.head_dim,
-            layout.kv_format, dtype,
-        )
+        if layout.layout == "paged":
+            cache["global"] = _kv_pool(
+                len(layout.global_layers), layout.num_pages * layout.page_size,
+                cfg.num_kv_heads, cfg.head_dim, layout.kv_format, dtype,
+            )
+            # -1 == unmapped: writes through the table drop, reads clamp to
+            # row 0 and rely on the caller's position masks
+            cache["page_table"] = jnp.full(
+                (B, layout.pages_per_slot), -1, jnp.int32
+            )
+        else:
+            cache["global"] = _kv_stack(
+                len(layout.global_layers), B, S, cfg.num_kv_heads, cfg.head_dim,
+                layout.kv_format, dtype,
+            )
     if layout.local_layers:
         # local ring buffers stay dense (int8): windows are small, and BGPP
         # targets the big global/full caches (paper's long-context case)
@@ -262,6 +368,98 @@ def bitplanes_to_k(planes: jax.Array, sign: jax.Array) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# paged addressing — logical position <-> physical pool row
+# --------------------------------------------------------------------------
+#
+# The page table is ``(B, pages_per_slot)`` int32; entry ``-1`` = unmapped.
+# Physical row of logical position p in slot b:
+#     page_table[b, p // page_size] * page_size + p % page_size
+# Write translation preserves the OOB-drop convention (OOB_INDEX lanes and
+# unmapped pages scatter nowhere); read translation clamps unmapped pages to
+# row 0 — every consumer masks those lanes by position anyway.
+
+
+def _tok_dim(name: str) -> int:
+    # pool token axis after the layer dim; the bgpp plane array interposes
+    # its plane dim: (layer, plane, token, ...)
+    return 2 if name == "k_planes" else 1
+
+
+def phys_table(page_table: jax.Array, page_size: int, max_seq: int):
+    """Gather map: ``(B, S_max)`` physical rows for every logical position
+    (unmapped pages clamp to row 0 — callers mask by position)."""
+    pos = jnp.arange(max_seq)
+    pid = page_table[:, pos // page_size]  # (B, S)
+    return jnp.where(pid >= 0, pid * page_size + (pos % page_size)[None], 0)
+
+
+def _phys_write(page_table: jax.Array, tpos: jax.Array, page_size: int,
+                max_seq: int, slot=None) -> jax.Array:
+    """Scatter map: physical rows for logical write targets ``tpos``
+    (``OOB_INDEX`` where the lane is padded / OOB / its page unmapped).
+
+    ``slot=None``: per-slot targets — tpos ``(B,)``, one row per batch slot.
+    ``slot=b`` (traced ok): tpos ``(S,)`` lanes of one slot's chunk.
+    """
+    n = page_table.shape[-1]
+    page = jnp.clip(tpos // page_size, 0, n - 1)
+    if slot is None:
+        pid = page_table[jnp.arange(page_table.shape[0]), page]
+    else:
+        pid = jnp.take(page_table, slot, axis=0)[page]
+    ok = (tpos >= 0) & (tpos < max_seq) & (pid >= 0)
+    return jnp.where(ok, pid * page_size + tpos % page_size, OOB_INDEX)
+
+
+def paged_entry(store: Tree, idx, phys: jax.Array) -> Tree:
+    """Gather layer ``idx`` of a paged pool back into the slot layout's
+    heads-major view: phys ``(B, S)`` -> entries ``(B, Hk, S, ...)`` (and
+    ``(NBITS, B, Hk, S, D/8)`` for bgpp planes).  The gathered values are
+    exactly the dense row's values, which is what keeps paged attention
+    bit-identical to the slot layout."""
+    out: Tree = {}
+    for n, a in store.items():
+        if n == "k_planes":
+            g = a[idx][:, phys]  # (NBITS, B, S, Hk, D/8)
+            out[n] = jnp.moveaxis(g, 3, 2)
+        else:
+            g = a[idx][phys]  # (B, S, Hk, ...)
+            out[n] = jnp.moveaxis(g, 2, 1)
+    return out
+
+
+def identity_page_table(layout: CacheLayout) -> jax.Array:
+    """Slot-major mapping (slot b, page j) -> physical page b*n+j — the
+    trivial table whole-batch prefill uses when no allocator is driving."""
+    B, n = layout.batch, layout.pages_per_slot
+    assert B * n <= layout.num_pages, "identity table exceeds the pool"
+    return jnp.arange(B * n, dtype=jnp.int32).reshape(B, n)
+
+
+def zero_pages(store: Tree, page_ids: jax.Array, page_size: int) -> Tree:
+    """Scrub physical pages (freed by the allocator) across EVERY pool leaf
+    — k/v bodies, int8 scales, bgpp bit/sign planes — in every layer.
+    ``page_ids`` may be padded with ``-1`` (dropped), so one jit serves any
+    eviction size."""
+    tok = page_ids[:, None] * page_size + jnp.arange(page_size)[None]
+    tok = jnp.where(page_ids[:, None] >= 0, tok, OOB_INDEX).reshape(-1)
+    store = dict(store)
+    for n, a in store.items():
+        store[n] = a.at[(slice(None),) * _tok_dim(n) + (tok,)].set(0)
+    return store
+
+
+def page_bytes(store: Tree, page_size: int) -> int:
+    """Bytes one physical page occupies across every leaf of a pool (host
+    arithmetic from shapes — the allocator's resident-KV accounting)."""
+    total = 0
+    for n, a in store.items():
+        n_tok = a.shape[_tok_dim(n)]
+        total += a.size * a.dtype.itemsize * page_size // n_tok
+    return total
+
+
+# --------------------------------------------------------------------------
 # stack writes — the ONE code path for bf16 / int8 / bgpp stores
 # --------------------------------------------------------------------------
 #
@@ -271,7 +469,8 @@ def bitplanes_to_k(planes: jax.Array, sign: jax.Array) -> jax.Array:
 
 
 def write_token(store: Tree, idx: int, k: jax.Array, v: jax.Array,
-                tpos: jax.Array) -> Tree:
+                tpos: jax.Array, *, page_table=None, page_size: int = 0,
+                max_seq: int = 0) -> Tree:
     """Write one decode token into layer ``idx`` of a KV stack, per slot.
 
     k/v: fresh projections ``(B, 1, Hk, Dh)`` (seq-major).
@@ -279,8 +478,17 @@ def write_token(store: Tree, idx: int, k: jax.Array, v: jax.Array,
     the absolute position for global stacks, ``pos % window`` for local
     ring buffers.  Every batch row scatters to its own index, which is what
     lets staggered requests share one cache.
+
+    ``page_table`` selects the paged-pool path: tpos is translated through
+    the slot's table row (unmapped page => dropped write) and the scatter
+    targets the token-major pool.
     """
     B = k.shape[0]
+    if page_table is not None:
+        # (B, 1) targets broadcast against the (B, 1, Hk, ...) projections,
+        # so the shared paged scatter tail serves decode writes too
+        phys = _phys_write(page_table, tpos, page_size, max_seq)
+        return _scatter_paged_kv(store, idx, phys[:, None], k, v)
     bidx = jnp.arange(B)
     if "k_planes" in store:  # bgpp: bit-planed K magnitudes + int8 V
         kq, ks = quantize_kv(k)
@@ -327,9 +535,37 @@ def _scatter_chunk_kv(store: Tree, idx: int, slot, tpos, k, v) -> Tree:
     return store
 
 
+def _scatter_paged_kv(store: Tree, idx, phys, k, v) -> Tree:
+    """Quantize-and-scatter K/V token rows into pool rows ``phys`` (any
+    shape matching k/v's leading batch/seq dims; OOB rows drop).  Values
+    stay token-major — the pool's native order, so no transposes."""
+    if "k_planes" in store:
+        kq, ks = quantize_kv(k)
+        planes, sign = k_to_bitplanes(kq)  # (NBITS, *phys.shape, Hk, D/8)
+        store["k_planes"] = store["k_planes"].at[idx, :, phys].set(
+            jnp.moveaxis(planes, 0, phys.ndim))
+        store["k_sign"] = store["k_sign"].at[idx, phys].set(sign)
+        store["k_scale"] = store["k_scale"].at[idx, phys].set(ks)
+        vq, vs = quantize_kv(v)
+        store["v"] = store["v"].at[idx, phys].set(vq)
+        store["v_scale"] = store["v_scale"].at[idx, phys].set(vs)
+    elif "k_scale" in store:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        store["k"] = store["k"].at[idx, phys].set(kq)
+        store["v"] = store["v"].at[idx, phys].set(vq)
+        store["k_scale"] = store["k_scale"].at[idx, phys].set(ks)
+        store["v_scale"] = store["v_scale"].at[idx, phys].set(vs)
+    else:
+        store["k"] = store["k"].at[idx, phys].set(k.astype(store["k"].dtype))
+        store["v"] = store["v"].at[idx, phys].set(v.astype(store["v"].dtype))
+    return store
+
+
 def write_prefill(store: Tree, idx: int, k: jax.Array, v: jax.Array,
                   *, slot: Optional[int] = None, offset=None,
-                  length=None) -> Tree:
+                  length=None, page_table=None, page_size: int = 0,
+                  max_seq: int = 0) -> Tree:
     """Write a whole prompt's K/V into positions ``[0, S)`` of a global stack.
 
     k/v: ``(B, S, Hk, Dh)``.  ``slot=None`` writes every batch row (fresh
@@ -342,8 +578,31 @@ def write_prefill(store: Tree, idx: int, k: jax.Array, v: jax.Array,
     lanes scatter to :data:`OOB_INDEX` and are dropped.  ``slot``/``offset``/
     ``length`` may all be traced scalars, so one jitted chunk step serves
     every slot and token offset (compiled once per chunk width ``S``).
+
+    ``page_table`` selects the paged-pool path: every logical target is
+    translated through the table (same OOB-drop convention; writes to
+    unmapped pages vanish) and scattered token-major into the pool.
     """
     S = k.shape[1]
+    if page_table is not None:
+        if offset is not None:
+            assert slot is not None and k.shape[0] == 1, \
+                "chunked writes admit one prompt into one slot"
+            length = S if length is None else length
+            lane = jnp.arange(S)
+            tpos = jnp.where(lane < length, offset + lane, OOB_INDEX)
+            phys = _phys_write(page_table, tpos, page_size, max_seq, slot=slot)
+            return _scatter_paged_kv(store, idx, phys, k[0], v[0])
+        lanes = jnp.arange(S)
+        if slot is None:
+            pid = page_table[:, lanes // page_size]  # (B, S)
+            phys = jnp.where(pid >= 0,
+                             pid * page_size + (lanes % page_size)[None],
+                             OOB_INDEX)
+            return _scatter_paged_kv(store, idx, phys, k, v)
+        assert k.shape[0] == 1, "slot admission writes one prompt at a time"
+        phys = _phys_write(page_table, lanes, page_size, max_seq, slot=slot)
+        return _scatter_paged_kv(store, idx, phys, k[0], v[0])
     if offset is not None:
         assert slot is not None and k.shape[0] == 1, \
             "chunked writes admit one prompt into one slot"
@@ -472,13 +731,20 @@ def reset_slot(cache: Tree, layout: CacheLayout, slot: int) -> Tree:
     ``engine.prefill_into_slot`` (which calls this first, so stale ring
     positions from the previous occupant can never alias into the new
     request's valid window).
+
+    Paged layouts: the global pool has no batch rows — page lifecycle
+    (decref, free, zero) belongs to :class:`repro.serving.paging
+    .PageAllocator`, and the device page table is synced from its host
+    copy, so this clears only the slot-major state (local rings, mamba,
+    cross, pos).
     """
 
     def _clear(a, bdim, fill=0):
         return a.at[(slice(None),) * bdim + (slot,)].set(fill)
 
     cache = dict(cache)
-    for stack in ("global", "local"):
+    stacks = ("local",) if layout.layout == "paged" else ("global", "local")
+    for stack in stacks:
         if stack not in cache:
             continue
         st = dict(cache[stack])

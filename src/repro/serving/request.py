@@ -47,6 +47,9 @@ class Request:
 
     # --- filled in by the scheduler -----------------------------------
     generated: List[int] = dataclasses.field(default_factory=list)
+    # prompt tokens whose KV was adopted from resident shared pages at
+    # admission instead of prefilled (paged layouts with prefix reuse)
+    prefix_reused_tokens: int = 0
     admitted_step: int = -1  # step at which a slot started prefilling this
     first_token_step: int = -1  # step at which prefill finished (token 1)
     finished_step: int = -1
@@ -86,6 +89,7 @@ class Request:
         return {
             "rid": self.rid,
             "prompt_len": self.prompt_len,
+            "prefix_reused_tokens": self.prefix_reused_tokens,
             "new_tokens": len(self.generated),
             "arrival_step": self.arrival_step,
             "admitted_step": self.admitted_step,
@@ -118,21 +122,29 @@ class Slot:
 
 def poisson_trace(rng: np.random.Generator, n: int, vocab: int, max_new: int,
                   arrival_rate: float = 2.0, min_new: int = 2,
-                  max_prompt: int = 23) -> List[Request]:
+                  max_prompt: int = 23,
+                  shared_prefix: int = 0) -> List[Request]:
     """Poisson-ish request trace shared by the launcher and the throughput
     benchmark: exponential inter-arrival gaps (in decode steps), prompt
     lengths ``min(8, max_prompt)..max_prompt``, decode budgets
     ``min(min_new, max_new)..max_new``.  Cap ``max_prompt`` below the
-    cache's ``max_seq`` so every request is admissible."""
+    cache's ``max_seq`` so every request is admissible.
+
+    ``shared_prefix > 0`` prepends the same ``shared_prefix`` random tokens
+    to every prompt — the shared-system-prompt workload the paged cache's
+    prefix reuse targets (each request still gets its own random tail)."""
     lo = max(1, min(min_new, max_new))
     plo = max(1, min(8, max_prompt))
+    prefix = rng.integers(0, vocab, (shared_prefix,)).astype(np.int32)
     reqs, step = [], 0
     for rid in range(n):
         step += int(rng.exponential(arrival_rate))
+        tail = rng.integers(
+            0, vocab, (int(rng.integers(plo, max_prompt + 1)),)
+        ).astype(np.int32)
         reqs.append(Request(
             rid=rid,
-            prompt=rng.integers(0, vocab, (int(rng.integers(plo, max_prompt + 1)),))
-            .astype(np.int32),
+            prompt=np.concatenate([prefix, tail]) if shared_prefix else tail,
             max_new_tokens=int(rng.integers(lo, max_new + 1)),
             arrival_step=step,
         ))

@@ -16,6 +16,22 @@ prefill tokens runs between consecutive batched decode steps.
 forward per prompt, decode stalls until it finishes) as the reference /
 benchmark baseline.
 
+Paged layouts (``layout_for(..., layout="paged")``) add a host-side
+:class:`~repro.serving.paging.PageAllocator` to the loop: pages are mapped
+just ahead of every chunk/decode write, the device page table is synced
+whenever the host copy changes, and eviction decrefs the slot's pages —
+zeroing (on device) only those whose refcount hit zero.  When an admitted
+slot first advances, its prompt is hashed against the prefix index; a hit
+adopts the resident requests' full prompt pages (refcount++) and skips
+straight to the first un-reused token, so shared system prompts prefill
+once.  (Adoption waits for the first advance rather than assignment so a
+queued-behind adopter never holds shared pages at device pos 0, where the
+batched decode's garbage writes would land.)  Reuse is offered
+for global-only attention stacks (sliding-window rings discard the prefix
+positions a reused slot would need); everything else about paged serving —
+including every logit — is bit-identical to the slot layout, which is how
+the fuzz oracle checks it.
+
 Greedy sampling by default; pass ``sample_fn`` for anything richer, or set
 ``Request.forced_tokens`` to teacher-force a response (serving oracles).
 The scheduler is deliberately host-side python around jitted device steps —
@@ -36,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.distributed import sharding as sh
 from repro.serving import engine, kv_cache as kvc
+from repro.serving.paging import PageAllocator
 from repro.serving.request import Request, Slot, SlotState
 
 
@@ -85,10 +102,25 @@ class Scheduler:
         self.record_logits = record_logits
 
         self.cache = kvc.init_cache_arrays(cfg, layout)
+        self.pager: Optional[PageAllocator] = None
+        # a paged layout with no global stack has no pools to manage
+        if layout.layout == "paged" and layout.global_layers:
+            self.pager = PageAllocator(layout)
+            self._page_bytes = kvc.page_bytes(
+                self.cache["global"], layout.page_size
+            )
+            self._zero_pages = jax.jit(
+                lambda store, ids: kvc.zero_pages(store, ids, layout.page_size),
+                donate_argnums=(0,),
+            )
         self.slots: List[Slot] = [Slot(i) for i in range(layout.batch)]
         self.queue: Deque[Request] = collections.deque()
         if shared_fns is not None:
             # reuse another scheduler's compiled steps (same cfg/layout/rules)
+            assert shared_fns.get("layout") in (None, layout), (
+                "shared_fns were compiled for a different cache layout: "
+                f"{shared_fns.get('layout')} vs {layout}"
+            )
             self.serve_step = shared_fns["serve_step"]
             self.chunked = shared_fns.get("chunked")
         else:
@@ -111,11 +143,68 @@ class Scheduler:
         # audit trail for the chunk-budget contract: valid prompt tokens
         # prefilled between this step's admission and its decode
         self.prefill_tokens_per_step: List[int] = []
+        # prefix-reuse accounting (paged layouts)
+        self.prompt_tokens_admitted = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+
+    # ------------------------------------------------------------------
+    # paged-layout page lifecycle (host allocator <-> device table)
+    # ------------------------------------------------------------------
+
+    def _sync_pages(self) -> None:
+        """Push the host page table to the device copy if it changed."""
+        if self.pager is not None and self.pager.dirty:
+            self.cache["page_table"] = jnp.asarray(self.pager.table)
+            self.pager.dirty = False
+
+    def _ensure_pages(self, slot: int, lo: int, hi: int) -> None:
+        if self.pager is not None:
+            self.pager.ensure_range(slot, lo, hi)
+            self._sync_pages()
+
+    def _release_pages(self, slot: int) -> None:
+        """Evict a slot's pages: decref all, zero (on device) the ones
+        whose refcount hit zero — prefix sharers keep theirs."""
+        if self.pager is None:
+            return
+        freed = self.pager.release_slot(slot)
+        if freed:
+            ids = np.full(self.layout.pages_per_slot, -1, np.int32)
+            ids[:len(freed)] = freed
+            self.cache["global"] = self._zero_pages(
+                self.cache["global"], jnp.asarray(ids)
+            )
+        self._sync_pages()
+
+    def _try_prefix_reuse(self, slot: Slot, req: Request) -> None:
+        """Adopt resident prompt pages matching this prompt's head.  Only
+        global-only stacks qualify: ring layers would need the reused
+        positions' window contents, which nothing retains.
+
+        Called at the slot's FIRST chunk advance, not at assignment: the
+        batched ``serve_step`` garbage-writes every row at its device pos,
+        which is harmless only while the row maps no pages (writes drop) or
+        only its own (the next chunk re-covers the frontier).  A waiting
+        slot holding adopted pages at pos 0 would let that garbage corrupt
+        the donor's shared prompt KV.  The advancing slot always moves past
+        the reused region in the same scheduler step, so its own garbage
+        writes stay on private pages."""
+        if self.pager is None or self.layout.local_layers:
+            return
+        n, ids = self.pager.lookup_prefix(req.prompt)
+        if n:
+            self.pager.adopt_prefix(slot.index, ids)
+            slot.prefill_pos = n
+            req.prefix_reused_tokens = n
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += n
 
     def shared_fns(self) -> dict:
         """Compiled steps, reusable by another Scheduler on the same
         (cfg, layout, rules) — e.g. an oracle's alone-runs."""
-        return {"serve_step": self.serve_step, "chunked": self.chunked}
+        return {"serve_step": self.serve_step, "chunked": self.chunked,
+                "layout": self.layout}
 
     # ------------------------------------------------------------------
     # queue / admission
@@ -184,6 +273,8 @@ class Scheduler:
             slot.request = req
             req.admitted_step = self.step_count
             req.admit_time = time.perf_counter()
+            self.prompt_tokens_admitted += req.prompt_len
+            self._ensure_pages(slot.index, 0, req.prompt_len)
             logits, self.cache = engine.prefill_into_slot(
                 self.params, self.cfg, self.layout, self.cache, slot.index,
                 jnp.asarray(req.prompt, jnp.int32), self.rules,
@@ -213,17 +304,24 @@ class Scheduler:
             req.admitted_step = self.step_count
             req.admit_time = time.perf_counter()
             self.cache = self.chunked.reset(self.cache, s.index)
+            self.prompt_tokens_admitted += req.prompt_len
         admitting = [s for s in self.slots if s.state is SlotState.PREFILLING]
         if not admitting:
             return 0
         slot = min(admitting, key=lambda s: (s.request.admitted_step, s.index))
         req = slot.request
+        if slot.prefill_pos == 0:
+            # first advance of this slot: safe point for prefix adoption
+            # (see _try_prefix_reuse on why assignment time is not)
+            self._try_prefix_reuse(slot, req)
         spent = 0
         logits, n = None, 0
         while spent < self.chunk_budget and slot.prefill_pos < req.prompt_len:
             take = min(req.prompt_len - slot.prefill_pos,
                        self.chunk_budget - spent,
                        self.chunked.buckets[-1])  # custom buckets < budget
+            self._ensure_pages(slot.index, slot.prefill_pos,
+                               slot.prefill_pos + take)
             logits, self.cache, n = self.chunked.run_chunk(
                 self.params, self.cache, slot.index,
                 req.prompt[slot.prefill_pos:slot.prefill_pos + take],
@@ -231,6 +329,11 @@ class Scheduler:
             )
             slot.prefill_pos += n
             spent += n
+        if self.pager is not None and not self.layout.local_layers:
+            # every page-aligned prompt prefix now fully written becomes a
+            # reuse candidate for later admissions
+            self.pager.register_prefix(slot.index, req.prompt,
+                                       slot.prefill_pos)
         if slot.prefill_pos >= req.prompt_len:
             self._emit_first_token(slot, np.asarray(logits[0, n - 1], np.float32))
         return spent
@@ -256,6 +359,9 @@ class Scheduler:
         req.finish_time = time.perf_counter()
         slot.state = SlotState.DONE
         self.finished.append(req)
+        # paged eviction is physical for the pool: decref every mapped
+        # page, zero + free the ones no sharer still holds
+        self._release_pages(slot.index)
         # eviction is logical only: the physical row reset (an O(cache)
         # copy) happens once, at the next admission — both admission paths
         # always reset_slot first, and per-slot valid masks keep the
@@ -284,6 +390,14 @@ class Scheduler:
         if not live:
             self.step_count += 1
             return bool(busy)  # prefill progress still counts as work
+        if self.pager is not None:
+            for slot in live:
+                # this decode step writes slot KV at the device pos
+                # (tracked host-side): prompt_len + generated - 1
+                r = slot.request
+                p = r.prompt_len + len(r.generated) - 1
+                self.pager.ensure_range(slot.index, p, p + 1)
+            self._sync_pages()
         logits, self.cache = self.serve_step(
             self.params, self.cache, jnp.asarray(self.tokens)
         )
@@ -318,6 +432,7 @@ class Scheduler:
         ) if self.finished else np.asarray([])
         out = {
             "admission": self.admission,
+            "kv_layout": self.layout.layout,
             "finished_requests": len(self.finished),
             "decoded_tokens": self.decoded_tokens,
             "steps": self.step_count,
@@ -330,6 +445,25 @@ class Scheduler:
             "itl_s": _percentiles(gaps),
             "requests": [r.trace_record() for r in self.finished],
         }
+        if self.pager is not None:
+            pb = self._page_bytes
+            out["paged"] = {
+                "page_size": self.layout.page_size,
+                "num_pages": self.layout.num_pages,
+                "pages_allocated_total": self.pager.alloc_count,
+                "pages_in_use": self.pager.pages_in_use,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_hit_rate": round(
+                    self.prefix_hit_tokens
+                    / max(1, self.prompt_tokens_admitted), 4
+                ),
+                "resident_kv_bytes_peak": self.pager.peak_pages * pb,
+                # what the slot layout pins resident for the same traffic:
+                # every slot's full (S_max,) row, hit or miss
+                "slot_resident_kv_bytes":
+                    self.layout.batch * self.layout.pages_per_slot * pb,
+            }
         if wall_s is not None:
             out["wall_s"] = round(wall_s, 3)
             out["tokens_per_s"] = round(self.decoded_tokens / wall_s, 2) \

@@ -3,19 +3,30 @@
 N requests with random prompt lengths, arrival steps, and decode budgets
 are driven through chunked admission (fixed-shape prefill chunks
 interleaved with batched decode), then each request is re-run ALONE through
-an identical scheduler and compared token-for-token / logit-row-for-row:
+a slot-layout scheduler and compared token-for-token / logit-row-for-row:
 
   * bf16   — greedy decode, generated tokens AND per-token logits must be
              bit-identical (slot isolation + chunk determinism);
   * int8 / bgpp — teacher-forced continuations (so quantized near-tie
              argmax flips can't compound), per-token logits within 1e-5.
 
+The joint run is parametrized over ``layout`` ∈ {slot, paged}: the paged
+joint trace (pooled KV pages, page-table translation, prefix reuse) is
+checked against *slot-layout* alone runs, which is the cross-layout
+bit-exactness contract of the paged cache.  The shared-prefix tests force
+prefix reuse (deterministic arrival overlap) and assert both that reuse
+happened and that logits still match the slot oracle exactly.
+
 The seed comes from the ``rng_seed`` fixture (stable per test node id) and
-can be pinned via ``REPRO_FUZZ_SEED`` — CI runs the kv-format matrix with a
-fixed seed.  Heavier traces sit behind the ``slow`` marker.
+can be pinned via ``REPRO_FUZZ_SEED`` — CI runs the kv-format × layout
+matrix with a fixed seed; the nightly workflow runs the ``slow`` suite
+with a date-derived seed and, on failure, uploads the JSON trace each
+oracle dumps to ``REPRO_FUZZ_TRACE_DIR`` for offline replay.
 """
 
+import contextlib
 import dataclasses
+import json
 import os
 
 import numpy as np
@@ -35,6 +46,7 @@ jax.config.update("jax_platform_name", "cpu")
 ARCHS = {"dense": "phi4-mini-3.8b", "swa": "gemma3-4b"}
 MAX_SEQ = 48
 SLOTS = 2
+PAGE_SIZE = 8
 CHUNK_BUDGET = 6  # buckets (4, 6): lengths 3..20 hit off-bucket/exact/multi
 
 _MODELS = {}
@@ -52,6 +64,11 @@ def _model(key):
         params, _ = model_zoo.init(jax.random.key(0), cfg)
         _MODELS[key] = (cfg, params)
     return _MODELS[key]
+
+
+def _layout_for(cfg, kv_format, layout, slots=SLOTS):
+    return kvc.layout_for(cfg, slots, MAX_SEQ, kv_format=kv_format,
+                          layout=layout, page_size=PAGE_SIZE)
 
 
 def _random_requests(rng, cfg, n, teacher_forced):
@@ -78,6 +95,32 @@ def _clone(req, arrival_step):
                    forced_tokens=req.forced_tokens)
 
 
+@contextlib.contextmanager
+def _dump_failing_trace(meta, reqs):
+    """On oracle failure, write a replayable JSON trace (prompts, budgets,
+    arrivals, seed) to REPRO_FUZZ_TRACE_DIR — the nightly workflow uploads
+    that directory as a run artifact."""
+    try:
+        yield
+    except AssertionError:
+        out_dir = os.environ.get("REPRO_FUZZ_TRACE_DIR")
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            trace = dict(meta)
+            trace["requests"] = [{
+                "rid": r.rid,
+                "prompt": np.asarray(r.prompt).tolist(),
+                "max_new_tokens": r.max_new_tokens,
+                "arrival_step": r.arrival_step,
+                "forced_tokens": None if r.forced_tokens is None
+                else np.asarray(r.forced_tokens).tolist(),
+            } for r in reqs]
+            name = "-".join(str(v) for v in meta.values()) + ".json"
+            with open(os.path.join(out_dir, name), "w") as f:
+                json.dump(trace, f, indent=2)
+        raise
+
+
 def _run(cfg, params, layout, reqs, shared=None):
     sched = Scheduler(
         params, cfg, layout, admission="chunked", chunk_budget=CHUNK_BUDGET,
@@ -90,65 +133,150 @@ def _run(cfg, params, layout, reqs, shared=None):
     assert max(sched.prefill_tokens_per_step, default=0) <= CHUNK_BUDGET, (
         "chunk budget violated between decode steps"
     )
+    if sched.pager is not None:
+        sched.pager.check()
     return sched, {r.rid: r for r in sched.finished}
 
 
-def _fuzz_oracle(arch_key, kv_format, seed, n_requests):
-    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
-    rng = np.random.default_rng(seed)
-    cfg, params = _model(arch_key)
-    layout = kvc.layout_for(cfg, SLOTS, MAX_SEQ, kv_format=kv_format)
+def _compare_to_alone_runs(cfg, params, reqs, joint, arch_key, kv_format,
+                           layout, joint_shared=None, slots=SLOTS):
+    """Re-run each request alone on the SLOT layout and compare — the slot
+    path is the oracle for both layouts.  ``joint_shared``: the joint
+    scheduler's compiled fns, reusable only when the joint run itself was
+    the slot layout.  ``slots`` must match the joint run's batch: XLA
+    reductions are only bit-stable at a fixed batch shape."""
     exact = kv_format == "bf16"
-    reqs = _random_requests(rng, cfg, n_requests, teacher_forced=not exact)
-
-    joint_sched, joint = _run(
-        cfg, params, layout, [_clone(r, r.arrival_step) for r in reqs]
-    )
-    shared = joint_sched.shared_fns()
+    slot_layout = _layout_for(cfg, kv_format, "slot", slots=slots)
+    shared = joint_shared
     for r in reqs:
-        _, alone = _run(cfg, params, layout, [_clone(r, 0)], shared=shared)
+        alone_sched, alone = _run(cfg, params, slot_layout, [_clone(r, 0)],
+                                  shared=shared)
+        shared = alone_sched.shared_fns()
         got, want = joint[r.rid], alone[r.rid]
         assert len(got.generated) == len(want.generated)
         assert len(got.logit_rows) == len(want.logit_rows)
         for t, (g, w) in enumerate(zip(got.logit_rows, want.logit_rows)):
             if exact:
                 assert np.array_equal(g, w), (
-                    f"{arch_key}/{kv_format} rid {r.rid} token {t}: staggered "
-                    f"logits not bit-identical to the alone run "
-                    f"(max |d| {np.max(np.abs(g - w))})"
+                    f"{arch_key}/{kv_format}/{layout} rid {r.rid} token {t}: "
+                    f"staggered logits not bit-identical to the slot-layout "
+                    f"alone run (max |d| {np.max(np.abs(g - w))})"
                 )
             else:
                 err = float(np.max(np.abs(g - w)))
                 assert err <= 1e-5, (
-                    f"{arch_key}/{kv_format} rid {r.rid} token {t}: |d|={err}"
+                    f"{arch_key}/{kv_format}/{layout} rid {r.rid} "
+                    f"token {t}: |d|={err}"
                 )
         if exact:
             assert got.generated == want.generated, (
-                f"{arch_key}/{kv_format} rid {r.rid}: greedy tokens diverge"
+                f"{arch_key}/{kv_format}/{layout} rid {r.rid}: greedy "
+                f"tokens diverge"
             )
 
 
+def _fuzz_oracle(arch_key, kv_format, seed, n_requests, layout="slot"):
+    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
+    rng = np.random.default_rng(seed)
+    cfg, params = _model(arch_key)
+    reqs = _random_requests(rng, cfg, n_requests,
+                            teacher_forced=kv_format != "bf16")
+    meta = {"oracle": "fuzz", "arch": arch_key, "kv_format": kv_format,
+            "layout": layout, "seed": seed}
+    with _dump_failing_trace(meta, reqs):
+        joint_sched, joint = _run(
+            cfg, params, _layout_for(cfg, kv_format, layout),
+            [_clone(r, r.arrival_step) for r in reqs],
+        )
+        _compare_to_alone_runs(
+            cfg, params, reqs, joint, arch_key, kv_format, layout,
+            joint_shared=joint_sched.shared_fns() if layout == "slot" else None,
+        )
+
+
+def _shared_prefix_oracle(kv_format, seed):
+    """Deterministic arrival overlap on THREE slots: request 0 prefills a
+    32-token system prompt (4 pages) and keeps decoding; requests 1/2
+    arrive the SAME step while it is resident, so both are assigned slots
+    together and one queues behind the other with its adoption pending —
+    the regression shape for the batched decode's garbage writes (a
+    waiting slot must hold no shared pages, or the donor's prompt KV gets
+    corrupted at its device pos).  Both must adopt the pages AND still
+    match the slot-layout alone runs exactly."""
+    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
+    rng = np.random.default_rng(seed)
+    cfg, params = _model("dense")
+    teacher = kv_format != "bf16"
+    prefix = rng.integers(0, cfg.vocab_size, (32,)).astype(np.int32)
+
+    def req(rid, tail_len, max_new, arrival):
+        return Request(
+            rid=rid,
+            prompt=np.concatenate([prefix, rng.integers(
+                0, cfg.vocab_size, (tail_len,)).astype(np.int32)]),
+            max_new_tokens=max_new,
+            arrival_step=arrival,
+            forced_tokens=rng.integers(0, cfg.vocab_size, (max_new,))
+            .astype(np.int32) if teacher else None,
+        )
+
+    # rid 0: resident past step 8 (prefill ~6 steps + 10 decode steps);
+    # rid 1/2 arrive together at step 8 with its 4 prompt pages registered
+    reqs = [req(0, 4, 10, 0), req(1, 5, 4, 8), req(2, 3, 3, 8)]
+    meta = {"oracle": "shared-prefix", "arch": "dense",
+            "kv_format": kv_format, "layout": "paged", "seed": seed}
+    with _dump_failing_trace(meta, reqs):
+        joint_sched, joint = _run(
+            cfg, params, _layout_for(cfg, kv_format, "paged", slots=3),
+            [_clone(r, r.arrival_step) for r in reqs],
+        )
+        assert joint_sched.prefix_hit_tokens >= 64, (
+            f"both late requests must adopt the 32-token prefix: "
+            f"{joint_sched.prefix_hit_tokens} tokens adopted"
+        )
+        _compare_to_alone_runs(cfg, params, reqs, joint, "dense", kv_format,
+                               "paged", slots=3)
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
 class TestFuzzOracle:
-    def test_dense_bf16(self, rng_seed):
-        _fuzz_oracle("dense", "bf16", rng_seed, n_requests=4)
+    def test_dense_bf16(self, rng_seed, layout):
+        _fuzz_oracle("dense", "bf16", rng_seed, 4, layout=layout)
 
-    def test_dense_int8(self, rng_seed):
-        _fuzz_oracle("dense", "int8", rng_seed, n_requests=4)
+    def test_dense_int8(self, rng_seed, layout):
+        _fuzz_oracle("dense", "int8", rng_seed, 4, layout=layout)
 
-    def test_dense_bgpp(self, rng_seed):
-        _fuzz_oracle("dense", "bgpp", rng_seed, n_requests=4)
+    def test_dense_bgpp(self, rng_seed, layout):
+        _fuzz_oracle("dense", "bgpp", rng_seed, 4, layout=layout)
 
-    def test_swa_bf16(self, rng_seed):
-        _fuzz_oracle("swa", "bf16", rng_seed, n_requests=4)
-
-    @pytest.mark.slow
-    def test_swa_int8(self, rng_seed):
-        _fuzz_oracle("swa", "int8", rng_seed, n_requests=4)
+    def test_swa_bf16(self, rng_seed, layout):
+        # gemma3 mixes ring + global stacks: paged pools behind the rings
+        # (prefix reuse stays off — rings can't skip prefill)
+        _fuzz_oracle("swa", "bf16", rng_seed, 4, layout=layout)
 
     @pytest.mark.slow
-    def test_swa_bgpp(self, rng_seed):
-        _fuzz_oracle("swa", "bgpp", rng_seed, n_requests=4)
+    def test_swa_int8(self, rng_seed, layout):
+        _fuzz_oracle("swa", "int8", rng_seed, 4, layout=layout)
 
     @pytest.mark.slow
-    def test_dense_bf16_heavy(self, rng_seed):
-        _fuzz_oracle("dense", "bf16", rng_seed + 1, n_requests=7)
+    def test_swa_bgpp(self, rng_seed, layout):
+        _fuzz_oracle("swa", "bgpp", rng_seed, 4, layout=layout)
+
+    @pytest.mark.slow
+    def test_dense_bf16_heavy(self, rng_seed, layout):
+        _fuzz_oracle("dense", "bf16", rng_seed + 1, 7, layout=layout)
+
+
+class TestSharedPrefixReuse:
+    # "paged" in the names keys these into the paged half of the CI
+    # kv-format × layout fuzz matrix
+    def test_prefix_reuse_paged_bf16(self, rng_seed):
+        _shared_prefix_oracle("bf16", rng_seed)
+
+    @pytest.mark.slow
+    def test_prefix_reuse_paged_int8(self, rng_seed):
+        _shared_prefix_oracle("int8", rng_seed)
+
+    @pytest.mark.slow
+    def test_prefix_reuse_paged_bgpp(self, rng_seed):
+        _shared_prefix_oracle("bgpp", rng_seed)
