@@ -6,6 +6,7 @@ plus the paged KV cache under a shared-system-prompt trace.
         [--arch phi4-mini-3.8b] [--slots 2] [--requests 6] [--seed 0] \\
         [--kv-formats bf16,int8,bgpp] [--chunk-budget 8] [--quick] \\
         [--page-size 8] [--shared-prefix 16] \\
+        [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
         [--baseline BENCH_serving.json] [--out BENCH_serving.json]
 
 All runtimes drive the SAME jitted serve_step and the same seeded request
@@ -24,10 +25,15 @@ trace (staggered arrivals, varying prompt lengths and decode budgets):
 Reported per (format, runtime): tokens/s (useful tokens only), mean busy
 occupancy (slots holding an admitted request — PREFILLING or DECODING —
 over total slots: a reserved row is occupied capacity even while its
-prompt waits its turn to chunk), TTFT and ITL p50/p95, and per-request
-queue waits.  Runs on CPU via interpret-mode kernel dispatch
-(auto-detected off-TPU).  CSV on stdout per the benchmark contract;
-``--out`` writes the JSON consumed as the BENCH_serving baseline.
+prompt waits its turn to chunk), TTFT and ITL p50/p95, per-request queue
+waits, and ``decode_kv_bytes_per_step`` — the KV bytes one batched decode
+step gathers (``Scheduler.stats()["kv_read"]``).  The bgpp format decodes
+two-phase (bit-plane prediction + top-``--bgpp-keep-ratio`` full-precision
+gather, ``--bgpp-rounds`` progressive rounds), so its bytes-read must land
+WELL under the bf16 row — that ordering is part of the gate.  Runs on CPU
+via interpret-mode kernel dispatch (auto-detected off-TPU).  CSV on stdout
+per the benchmark contract; ``--out`` writes the JSON consumed as the
+BENCH_serving baseline.
 
   paged    — the chunked scheduler on the paged KV layout (pooled pages +
              page table + hash-based prefix reuse), driven by a trace whose
@@ -66,7 +72,9 @@ except ImportError:  # python benchmarks/serving_throughput.py
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     from common import emit, emit_header
 
-from repro.configs import ARCH_REGISTRY, get_config  # noqa: E402
+from repro.configs import (  # noqa: E402
+    ARCH_REGISTRY, apply_bgpp_overrides, get_config,
+)
 from repro.models import model_zoo  # noqa: E402
 from repro.serving import engine, kv_cache as kvc  # noqa: E402
 from repro.serving.request import poisson_trace  # noqa: E402
@@ -103,6 +111,14 @@ def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
         "mean_queue_wait_steps": float(np.mean(
             [r["queue_wait_steps"] for r in stats["requests"]])),
     }
+    kv = stats["kv_read"]
+    out |= {
+        "decode_kv_bytes_per_step": kv["decode_bytes_per_step"],
+        "decode_kv_bytes_reduction_vs_bf16":
+            kv["decode_bytes_reduction_vs_bf16"],
+    }
+    if "bgpp" in kv:
+        out["bgpp_full_rows_per_slot"] = kv["bgpp"]["full_rows_per_slot"]
     if "paged" in stats:
         pg = stats["paged"]
         out |= {
@@ -179,6 +195,11 @@ def main():
                     help="tokens per KV page for the paged runtime")
     ap.add_argument("--shared-prefix", type=int, default=16,
                     help="shared system-prompt tokens in the paged trace")
+    ap.add_argument("--bgpp-rounds", type=int, default=4,
+                    help="bgpp progressive-prediction rounds")
+    ap.add_argument("--bgpp-keep-ratio", type=float, default=0.25,
+                    help="fraction of keys the bgpp decode fetches at "
+                         "full precision")
     ap.add_argument("--quick", action="store_true",
                     help="one format, chunked+eager only — the CI gate")
     ap.add_argument("--baseline", default=None,
@@ -189,7 +210,10 @@ def main():
                     help="write the JSON baseline (e.g. BENCH_serving.json)")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=True)
+    cfg = apply_bgpp_overrides(
+        get_config(args.arch, smoke=True),
+        rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
+    )
     params, _ = model_zoo.init(jax.random.key(0), cfg)
     formats = args.kv_formats.split(",")
     if args.quick:
@@ -226,7 +250,8 @@ def main():
             extra = ""
             if runtime != "lockstep":
                 extra = (f";ttft_p95={r['ttft_s_p95']}"
-                         f";itl_p95={r['itl_s_p95']}")
+                         f";itl_p95={r['itl_s_p95']}"
+                         f";kv_step={r['decode_kv_bytes_per_step']}")
             emit(f"serving_{fmt}_{runtime}", us,
                  f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
                  + extra)
@@ -290,6 +315,27 @@ def main():
                 ok = False
             if r["resident_kv_bytes_peak"] >= r["slot_resident_kv_bytes"]:
                 ok = False
+
+    # the tentpole's bytes ordering: bgpp's two-phase decode (bit-planes +
+    # top-k full rows) must read WELL under the dense bf16 row — at least
+    # 2x at the default keep ratio (8x at rounds=4, keep=0.25).  Formats
+    # not driven live (--quick trims to bf16) are priced from their static
+    # layouts — identical numbers, since the counter IS the gather plan —
+    # so this gate also fires in the --quick CI run.
+    def _step_bytes(fmt):
+        live = results.get(fmt, {}).get("chunked")
+        if live is not None:
+            return live["decode_kv_bytes_per_step"]
+        return round(kvc.decode_read_bytes(
+            kvc.layout_for(cfg, args.slots, args.max_seq, kv_format=fmt), cfg
+        )["total"])
+
+    b_bytes, f_bytes = _step_bytes("bgpp"), _step_bytes("bf16")
+    print(f"# kv bytes/decode-step: bgpp {b_bytes} vs bf16 {f_bytes} "
+          f"({f_bytes / b_bytes:.2f}x reduction)")
+    if 2 * b_bytes > f_bytes:
+        print("# REGRESSION: bgpp decode reads are not well under bf16's")
+        ok = False
 
     if args.baseline:
         with open(args.baseline) as f:

@@ -24,7 +24,7 @@ import numpy as np
 
 import jax
 
-from repro.configs import ARCH_REGISTRY, get_config
+from repro.configs import ARCH_REGISTRY, apply_bgpp_overrides, get_config
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
 from repro.serving.request import Request
@@ -43,13 +43,21 @@ def main():
                     help="shared system-prompt tokens prepended to every "
                          "request (paged layouts reuse their pages)")
     ap.add_argument("--admission", default="chunked", choices=["chunked", "eager"])
+    ap.add_argument("--bgpp-rounds", type=int, default=None,
+                    help="bgpp progressive rounds (default: config's)")
+    ap.add_argument("--bgpp-keep-ratio", type=float, default=None,
+                    help="fraction of keys the bgpp decode keeps at full "
+                         "precision (default: config's)")
     ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=True)
+    cfg = apply_bgpp_overrides(
+        get_config(args.arch, smoke=True),
+        rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
+    )
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("this driver serves transformer families; "
                          "see tests/test_serving.py for ssm/hybrid/enc-dec")
@@ -98,6 +106,12 @@ def main():
           f"p95={stats['ttft_s']['p95']}  itl_s p50={stats['itl_s']['p50']} "
           f"p95={stats['itl_s']['p95']}  "
           f"max prefill tokens/step={stats['max_prefill_tokens_per_step']}")
+    kv = stats["kv_read"]
+    print(f"[serve] kv read/decode-step: {kv['decode_bytes_per_step']/1e3:.1f}"
+          f" kB vs {kv['decode_bf16_equiv_bytes_per_step']/1e3:.1f} kB "
+          f"bf16-equivalent ({kv['decode_bytes_reduction_vs_bf16']}x); "
+          f"bgpp full rows/slot/layer: "
+          f"{kv.get('bgpp', {}).get('full_rows_per_slot', '-')}")
     if "paged" in stats:
         pg = stats["paged"]
         print(f"[serve] paged: prefix hit rate {pg['prefix_hit_rate']:.3f}, "

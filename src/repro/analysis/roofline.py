@@ -17,6 +17,7 @@ brief.
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 from typing import Dict, Optional
 
@@ -174,7 +175,10 @@ def bgpp_kernel_traffic(
 
     vs the dense int8 baseline 2·S·D (K+V).  Returns bytes + the ratio.
     """
-    k_max = max(1, int(S * keep_ratio))
+    # ceil, matching THE serving plan (repro.serving.kv_cache
+    # .bgpp_decode_plan) so measured-vs-modeled comparisons never carry a
+    # silent rounding mismatch in k_max
+    k_max = max(1, math.ceil(S * keep_ratio))
     bytes_ = S * D / 8.0  # sign
     k_r = S
     for r in range(rounds):

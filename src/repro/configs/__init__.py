@@ -1,4 +1,10 @@
-from repro.configs.base import ARCH_REGISTRY, MCBPOptions, ModelConfig, get_config  # noqa: F401
+from repro.configs.base import (  # noqa: F401
+    ARCH_REGISTRY,
+    MCBPOptions,
+    ModelConfig,
+    apply_bgpp_overrides,
+    get_config,
+)
 from repro.configs import shapes  # noqa: F401
 
 # import for registry side effects

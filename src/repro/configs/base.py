@@ -36,6 +36,22 @@ class MCBPOptions:
     weight_format: str = "bf16"
 
 
+def apply_bgpp_overrides(cfg, rounds: Optional[int] = None,
+                         keep_ratio: Optional[float] = None):
+    """Return ``cfg`` with its BGPP decode knobs replaced (``None`` keeps
+    the config's value) — the one code path behind every CLI's
+    ``--bgpp-rounds`` / ``--bgpp-keep-ratio`` flags."""
+    if rounds is None and keep_ratio is None:
+        return cfg
+    mo = dataclasses.replace(
+        cfg.mcbp,
+        bgpp_rounds=cfg.mcbp.bgpp_rounds if rounds is None else int(rounds),
+        bgpp_keep_ratio=cfg.mcbp.bgpp_keep_ratio if keep_ratio is None
+        else float(keep_ratio),
+    )
+    return dataclasses.replace(cfg, mcbp=mo)
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str

@@ -5,6 +5,7 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
         --kv-format int8 --requests 8 --slots 4 --seed 0 \\
         [--admission chunked|eager] [--chunk-budget 16] \\
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16] \\
+        [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
         [--trace-out trace.json] [--data 1 --model 1]
 
 Requests arrive on a Poisson-ish trace with distinct prompt lengths and
@@ -17,8 +18,12 @@ whole-prompt B=1 admission as the reference baseline.  ``--kv-layout
 paged`` swaps the dense per-slot KV rows for pooled pages behind a page
 table (host allocator with refcounts): requests sharing a system prompt
 (``--shared-prefix``) reuse each other's resident prompt pages instead of
-re-prefilling them, bit-identically to the slot layout.  ``--trace-out``
-dumps per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
+re-prefilling them, bit-identically to the slot layout.  ``--kv-format
+bgpp`` decodes two-phase — bit-plane top-k prediction first
+(``--bgpp-rounds``), then a full-precision gather of only the surviving
+``--bgpp-keep-ratio`` fraction of keys — and the KV bytes each step read
+are reported (``kv_read`` in the stats/trace).  ``--trace-out`` dumps
+per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
 throughput as JSON so runs are reproducible (``--seed``) and comparable
 across PRs.
 """
@@ -33,7 +38,7 @@ import numpy as np
 
 import jax
 
-from repro.configs import ARCH_REGISTRY, get_config
+from repro.configs import ARCH_REGISTRY, apply_bgpp_overrides, get_config
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_debug_mesh
 from repro.models import model_zoo
@@ -56,6 +61,13 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request (exercises paged prefix reuse)")
+    ap.add_argument("--bgpp-rounds", type=int, default=None,
+                    help="progressive-prediction rounds for --kv-format "
+                         "bgpp (default: the config's, usually 4)")
+    ap.add_argument("--bgpp-keep-ratio", type=float, default=None,
+                    help="fraction of keys fetched at full precision by "
+                         "the bgpp top-k decode (default: the config's, "
+                         "usually 0.25)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
@@ -77,7 +89,10 @@ def main():
     ap.add_argument("--model", type=int, default=1)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=True)
+    cfg = apply_bgpp_overrides(
+        get_config(args.arch, smoke=True),
+        rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
+    )
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("continuous batching driver covers transformer "
                          "families; ssm/hybrid/enc-dec decode in tests/")
@@ -124,6 +139,20 @@ def main():
           f"p95={stats['ttft_s']['p95']}  "
           f"itl_s p50={stats['itl_s']['p50']} p95={stats['itl_s']['p95']}  "
           f"max prefill tokens/step={stats['max_prefill_tokens_per_step']}")
+    kv = stats["kv_read"]
+    print(f"[serve] kv read: {kv['decode_bytes']/1e6:.2f} MB decode + "
+          f"{kv['prefill_bytes']/1e6:.2f} MB prefill; "
+          f"{kv['decode_bytes_per_step']/1e3:.1f} kB/decode-step "
+          f"(bf16-equivalent {kv['decode_bf16_equiv_bytes_per_step']/1e3:.1f}"
+          f" kB, {kv['decode_bytes_reduction_vs_bf16']}x reduction)")
+    if "bgpp" in kv:
+        bg = kv["bgpp"]
+        print(f"[serve] bgpp two-phase: {bg['rounds']} rounds, "
+              f"{bg['full_rows_per_slot']} full-precision rows per "
+              f"(slot, layer) per step; per-step bytes = "
+              f"sign {bg['sign_bytes']/1e3:.1f} kB + planes "
+              f"{bg['plane_bytes']/1e3:.1f} kB + top-k full "
+              f"{bg['topk_full_bytes']/1e3:.1f} kB")
     if "paged" in stats:
         pg = stats["paged"]
         print(f"[serve] paged: prefix hit rate {pg['prefix_hit_rate']:.3f} "
@@ -139,6 +168,8 @@ def main():
             "requests": args.requests, "max_new": args.max_new,
             "admission": args.admission, "chunk_budget": args.chunk_budget,
             "arrival_rate": args.arrival_rate, "seed": args.seed,
+            "bgpp_rounds": cfg.mcbp.bgpp_rounds,
+            "bgpp_keep_ratio": cfg.mcbp.bgpp_keep_ratio,
         }
         with open(args.trace_out, "w") as f:
             json.dump(stats, f, indent=2)

@@ -1,1 +1,6 @@
-from repro.serving import engine, kv_cache, request, scheduler  # noqa: F401
+"""Serving runtime: per-slot continuous batching over the MCBP decode
+engine — KV-cache containers (slot and paged layouts), the chunked-prefill
+admission path, the host-side page allocator with prefix reuse, and the
+request scheduler.  See docs/ARCHITECTURE.md for the data-flow map."""
+
+from repro.serving import engine, kv_cache, paging, request, scheduler  # noqa: F401

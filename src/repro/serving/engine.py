@@ -118,36 +118,47 @@ def _decode_attend(q, entry, valid, cfg, fmt, head_mask=None):
     )[:, 0]
 
 
-def _bgpp_decode_attend(q, entry, valid, cfg):
-    """BGPP progressive *gather* decode (paper §3.3 + §4.5, TPU-adapted;
-    §Perf iteration C1).
+def _bgpp_quant_query(q, cfg):
+    """Quantize + MSB-truncate the decode query for bit-plane scoring.
 
-    Round 0 scores the magnitude MSB plane of every valid key; each later
-    round fetches (gathers) the next plane for the surviving half only —
-    a static-shape realization of the paper's early termination whose HBM
-    traffic is the packed bytes of survivors, not the whole cache.  The
-    final candidate set (k_max = keep_ratio·S) is gathered once at full
-    precision and consumed by the exact int8 formal compute (A2/A3).
-
-    entry: heads-major bgpp stack slices — k_planes (NBITS,B,Hk,S,D/8),
-    k_sign/(B,Hk,S,D/8), k_scale/v_scale (B,Hk,S), v (B,Hk,S,D).
-    q: (B, Hq, Dh).
+    q ``(B, Hq, Dh)`` -> f32 ``(B, Hk, g, Dh)`` (paper: 4-bit MSB query
+    precompute, shared by the slot and paged BGPP decode paths).
     """
-    mo = cfg.mcbp
     B, Hq, Dh = q.shape
     Hk = cfg.num_kv_heads
     g = Hq // Hk
-    S = valid.shape[1]
-
-    # quantize the query (paper: 4-bit MSB precompute)
     qg = q.reshape(B, Hk, g, Dh).astype(jnp.float32)
     dq = jnp.maximum(jnp.max(jnp.abs(qg), axis=-1, keepdims=True), 1e-8) / 127.0
     q_int = jnp.clip(jnp.round(qg / dq), -127, 127).astype(jnp.int32)
     q_int = bgpp_mod._truncate_query(q_int, kvc.NBITS, bgpp_mod.DEFAULT_QUERY_BITS)
-    qf = q_int.astype(jnp.float32)  # (B,Hk,g,D)
+    return q_int.astype(jnp.float32)  # (B,Hk,g,D)
 
-    rounds = max(1, min(mo.bgpp_rounds, kvc.NBITS))
-    k_max = max(1, min(S, int(math.ceil(mo.bgpp_keep_ratio * S))))
+
+def _bgpp_topk_indices(qf, plane0, sign_full, plane_at, valid, cfg):
+    """Progressive MSB-first top-k prediction (paper §3.3 early termination)
+    — phase 1 of BGPP decode, shared by the slot and paged layouts.
+
+    Round 0 scores the magnitude MSB plane of every valid key; each later
+    round fetches the next plane for the surviving half only — a
+    static-shape realization of the paper's early termination whose HBM
+    traffic is the packed bytes of survivors, not the whole cache.
+
+    qf: ``(B, Hk, g, D)`` quantized query (:func:`_bgpp_quant_query`);
+    plane0: ``(B, Hk, S, D/8)`` packed MSB plane of EVERY key; sign_full:
+    ``(B, Hk, S, D/8)``; ``plane_at(p, idx)``: packed plane ``p`` at
+    logical indices ``(B, Hk, k)`` -> ``(B, Hk, k, D/8)`` — the slot
+    layout takes from its dense row, the paged layout gathers survivor
+    pool rows directly, and both return identical VALUES, which is what
+    keeps the selected sets (and hence the final logits) identical across
+    layouts.
+
+    Returns ``(idx (B, Hk, k_max) logical ids, idx_valid (B, Hk, k_max))``
+    with ``k_max = ceil(bgpp_keep_ratio * S)``.
+    """
+    B, Hk, g, Dh = qf.shape
+    S = valid.shape[1]
+    # the plan IS the accounting: the same tuple prices decode_read_bytes
+    rounds, k_max, survivors = kvc.bgpp_decode_plan(S, cfg)
 
     def plane_scores(plane_bits, sign_bits, qf_):
         """signed plane contribution: (..., S', D) bits -> (B,Hk,g,S')."""
@@ -156,8 +167,8 @@ def _bgpp_decode_attend(q, entry, valid, cfg):
 
     # ---- round 0: MSB plane of every valid key ---------------------------
     p0 = kvc.NBITS - 1
-    plane = bitslice.unpack_bits(entry["k_planes"][p0], axis=-1).astype(jnp.float32)
-    sign = bitslice.unpack_bits(entry["k_sign"], axis=-1)
+    plane = bitslice.unpack_bits(plane0, axis=-1).astype(jnp.float32)
+    sign = bitslice.unpack_bits(sign_full, axis=-1)
     partial = plane_scores(plane, sign, qf) * float(2**p0)  # (B,Hk,g,S)
     score_h = jnp.max(partial, axis=2)  # GQA union
     score_h = jnp.where(valid[:, None, :], score_h, NEG_INF)
@@ -167,16 +178,17 @@ def _bgpp_decode_attend(q, entry, valid, cfg):
     # scores/partials shrink with the set, nothing is scattered back
     cur_idx = None  # None = all S keys
     for r in range(1, rounds):
-        k_r = max(k_max, S >> r)
+        k_r = survivors[r]
         _, li = jax.lax.top_k(score_h, k_r)  # local ids in the current set
         cur_idx = li if cur_idx is None else jnp.take_along_axis(cur_idx, li, axis=2)
         partial = jnp.take_along_axis(partial, li[:, :, None, :], axis=3)
-        take = lambda x, i=cur_idx: jnp.take_along_axis(x, i[..., None], axis=2)
         p_r = kvc.NBITS - 1 - r
         plane_g = bitslice.unpack_bits(
-            take(entry["k_planes"][p_r]), axis=-1
+            plane_at(p_r, cur_idx), axis=-1
         ).astype(jnp.float32)  # (B,Hk,k_r,D)
-        sign_g = bitslice.unpack_bits(take(entry["k_sign"]), axis=-1)
+        sign_g = bitslice.unpack_bits(
+            jnp.take_along_axis(sign_full, cur_idx[..., None], axis=2), axis=-1
+        )
         partial = partial + plane_scores(plane_g, sign_g, qf) * float(2**p_r)
         score_h = jnp.max(partial, axis=2)
         score_h = jnp.where(
@@ -186,30 +198,107 @@ def _bgpp_decode_attend(q, entry, valid, cfg):
             score_h, NEG_INF,
         )
 
-    # ---- formal compute on the final k_max set ----------------------------
+    # ---- the final k_max candidate set -----------------------------------
     _, li = jax.lax.top_k(score_h, k_max)
     idx = li if cur_idx is None else jnp.take_along_axis(cur_idx, li, axis=2)
-    take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
-    planes_g = jnp.stack(
-        [take(entry["k_planes"][pp]) for pp in range(kvc.NBITS)], axis=0
-    )  # (NBITS,B,Hk,k,D/8)
-    sign_g = take(entry["k_sign"])
-    k_q = kvc.bitplanes_to_k(planes_g, sign_g).astype(jnp.int8)  # (B,Hk,k,D)
-    gathered = {
+    idx_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid[:, None, :], (B, Hk, S)), idx, axis=2
+    )
+    return idx, idx_valid
+
+
+def _bgpp_formal_attend(q, gathered, idx_valid, cfg):
+    """Phase 2 of BGPP decode: exact int8 formal compute (A2/A3) over the
+    compacted candidate set.
+
+    gathered: ``{k_planes (NBITS, B, Hk, k, D/8), k_sign (B, Hk, k, D/8),
+    k_scale (B, Hk, k), v (B, Hk, k, D), v_scale (B, Hk, k)}`` — the
+    surviving tokens' full-precision rows, from either layout's gather.
+    ``idx_valid`` masks candidate lanes that top-k filled from invalid
+    cache positions (their gathered values are garbage, but NEG_INF logits
+    zero their probability mass exactly, so they cannot leak into the
+    output).
+    """
+    B = q.shape[0]
+    k_max = idx_valid.shape[-1]
+    k_q = kvc.bitplanes_to_k(
+        gathered["k_planes"], gathered["k_sign"]
+    ).astype(jnp.int8)  # (B,Hk,k,D)
+    entry = {
         "k": k_q,
+        "k_scale": gathered["k_scale"],
+        "v": gathered["v"],
+        "v_scale": gathered["v_scale"],
+    }
+    # int8 formal compute with per-(b,h) candidate masks
+    return _decode_attend(
+        q, entry,
+        valid=jnp.ones((B, k_max), bool), cfg=cfg, fmt="int8",
+        head_mask=idx_valid,
+    )
+
+
+def _bgpp_decode_attend(q, entry, valid, cfg):
+    """BGPP progressive decode over a FULL heads-major entry (paper §3.3 +
+    §4.5, TPU-adapted; §Perf iteration C1) — the slot-layout path and the
+    reference the two-phase paged path is tested bit-identical against.
+
+    The final candidate set (k_max = keep_ratio·S) is gathered once at
+    full precision and consumed by the exact int8 formal compute (A2/A3).
+
+    entry: heads-major bgpp stack slices — k_planes (NBITS,B,Hk,S,D/8),
+    k_sign/(B,Hk,S,D/8), k_scale/v_scale (B,Hk,S), v (B,Hk,S,D).
+    q: (B, Hq, Dh).
+    """
+    qf = _bgpp_quant_query(q, cfg)
+    idx, idx_valid = _bgpp_topk_indices(
+        qf, entry["k_planes"][kvc.NBITS - 1], entry["k_sign"],
+        lambda p, i: jnp.take_along_axis(
+            entry["k_planes"][p], i[..., None], axis=2
+        ),
+        valid, cfg,
+    )
+    take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
+    gathered = {
+        "k_planes": jnp.stack(
+            [take(entry["k_planes"][pp]) for pp in range(kvc.NBITS)], axis=0
+        ),  # (NBITS,B,Hk,k,D/8)
+        "k_sign": take(entry["k_sign"]),
         "k_scale": jnp.take_along_axis(entry["k_scale"], idx, axis=2),
         "v": take(entry["v"]),
         "v_scale": jnp.take_along_axis(entry["v_scale"], idx, axis=2),
     }
-    idx_valid = jnp.take_along_axis(
-        jnp.broadcast_to(valid[:, None, :], (B, Hk, S)), idx, axis=2
+    return _bgpp_formal_attend(q, gathered, idx_valid, cfg)
+
+
+def _bgpp_paged_decode_attend(q, store, gi, phys, valid, cfg):
+    """Two-phase BGPP decode on the paged pool — the access-reduced path.
+
+    Unlike every other paged attend, this never materializes the slot's
+    full row (:func:`repro.serving.kv_cache.paged_entry`): phase 1 gathers
+    only the cheap bit-slice planes — the MSB magnitude plane and the sign
+    plane at full width, then one further plane per progressive round for
+    the surviving candidates only — and runs the shared top-k prediction;
+    phase 2 translates the surviving logical indices through the page
+    table and gathers ONLY those ``ceil(keep_ratio·S)`` tokens'
+    full-precision rows into a compacted ``(B, Hk, K, ...)`` buffer for
+    the exact int8 formal compute.  Selection sees the same plane values
+    as the full-entry path, so the logits are bit-identical to
+    :func:`_bgpp_decode_attend` on the gathered view
+    (tests/test_bgpp_gather.py) — the reads shrink, the math doesn't.
+    """
+    qf = _bgpp_quant_query(q, cfg)
+    idx, idx_valid = _bgpp_topk_indices(
+        qf,
+        kvc.paged_plane(store, gi, kvc.NBITS - 1, phys),
+        kvc.paged_sign(store, gi, phys),
+        lambda p, i: kvc.paged_plane_rows(
+            store, gi, p, kvc.paged_rows_at(phys, i)
+        ),
+        valid, cfg,
     )
-    # int8 formal compute with per-(b,h) candidate masks
-    return _decode_attend(
-        q, gathered,
-        valid=jnp.ones((B, k_max), bool), cfg=cfg, fmt="int8",
-        head_mask=idx_valid,
-    )
+    gathered = kvc.paged_topk_entry(store, gi, kvc.paged_rows_at(phys, idx))
+    return _bgpp_formal_attend(q, gathered, idx_valid, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -263,21 +352,29 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
         out = _decode_attend(q[:, 0], entry, valid, cfg, fmt_l)
     else:
         gi = layout.global_layers.index(layer_idx)
+        valid = jnp.arange(layout.max_seq)[None, :] <= pos_c  # (B, S)
         if layout.layout == "paged":
             cache["global"] = kvc.write_token(
                 cache["global"], gi, k, v, pos,
                 page_table=cache["page_table"], **_paged_kw(layout),
             )
-            entry = kvc.paged_entry(cache["global"], gi, phys)
+            if fmt == "bgpp":
+                # two-phase attend: bit-planes first, then only the top-k
+                # survivors' full rows — never the whole paged row
+                out = _bgpp_paged_decode_attend(
+                    q[:, 0], cache["global"], gi, phys, valid, cfg
+                )
+            else:
+                entry = kvc.paged_entry(cache["global"], gi, phys)
+                out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
         else:
             cache["global"] = kvc.write_token(cache["global"], gi, k, v, pos)
             store = cache["global"]
             entry = {n: store[n][gi] for n in store}
-        valid = jnp.arange(layout.max_seq)[None, :] <= pos_c  # (B, S)
-        if fmt == "bgpp":
-            out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
-        else:
-            out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
+            if fmt == "bgpp":
+                out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
+            else:
+                out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
 
     out = out.reshape(B, 1, -1) @ p["attn"]["wo"]
     if cfg.post_norms and "post_attn_norm" in p:
@@ -343,10 +440,23 @@ def _sinusoid_at(pos, dim: int) -> jax.Array:
 
 
 def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
+    """Build the pure batched decode step for one (cfg, layout, rules):
+
+        serve_step(params, cache, tokens (B, 1)) -> (logits (B, 1, V), cache')
+
+    One call decodes ONE token for every batch slot at its own
+    ``cache["pos"]``; the scheduler jits it once and drives it for every
+    live mix of staggered requests.  Paged layouts hoist one
+    logical->pool gather map (:func:`repro.serving.kv_cache.phys_table`)
+    per step; ``kv_format="bgpp"`` global layers then attend two-phase —
+    bit-plane prediction first, full-precision gather only for the
+    surviving top-k (:func:`_bgpp_paged_decode_attend`).
+    """
     dtype = layers._dtype(cfg.dtype)
     thetas = transformer.layer_thetas(cfg) if cfg.family != "ssm" else None
 
     def serve_step(params, cache, tokens):
+        """One batched decode token for every slot at its own position."""
         pos = cache["pos"]  # per-slot (B,) int32 positions
         B = tokens.shape[0]
         # paged: one logical->pool gather map serves every global layer
@@ -694,6 +804,7 @@ def make_prefill_chunk(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     thetas = transformer.layer_thetas(cfg)
 
     def prefill_chunk(params, cache, tokens, slot, offset, length):
+        """One fixed-shape (1, C) prefill chunk against the live cache."""
         # paged: this slot's logical->pool gather row, hoisted once for
         # every global layer (the serve_step pattern)
         phys = jnp.take(

@@ -36,6 +36,7 @@ Two physical layouts for the *global* stacks (``CacheLayout.layout``):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -84,6 +85,12 @@ class CacheLayout:
 def layout_for(cfg, batch: int, max_seq: int, kv_format: str = "int8",
                layout: str = "slot", page_size: int = 8,
                num_pages: Optional[int] = None) -> CacheLayout:
+    """Derive a :class:`CacheLayout` from a model config: classify every
+    layer as global (full-sequence stack), local (ring buffer of the
+    sliding/chunked window), or mamba state, and — for
+    ``layout="paged"`` — size the shared page pool (default capacity
+    equals the dense allocation, so admission can never exhaust it;
+    pass a smaller ``num_pages`` to oversubscribe via prefix sharing)."""
     glob, loc, mamba = [], [], []
     window = 0
     for i in range(cfg.num_layers):
@@ -326,6 +333,7 @@ def init_cache(cfg, layout: CacheLayout) -> Tuple[Tree, Tree]:
 
 
 def cache_bytes(cache: Tree) -> int:
+    """Total bytes resident across every leaf of a cache pytree."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
@@ -351,6 +359,8 @@ def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`quantize_kv` (tests/oracles; decode never calls
+    this — the int8 cache is consumed directly by the int8 MXU dots)."""
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
@@ -428,6 +438,90 @@ def paged_entry(store: Tree, idx, phys: jax.Array) -> Tree:
     return out
 
 
+def paged_sign(store: Tree, idx, phys: jax.Array) -> jax.Array:
+    """Gather the packed sign plane of layer ``idx`` for every logical
+    position: phys ``(B, S)`` -> ``(B, Hk, S, D/8)`` heads-major.
+
+    Phase 1 of the two-phase BGPP decode: the sign plane is fetched once
+    for all keys (1/8 of the int8 K bytes), before any full-precision row.
+    """
+    return jnp.moveaxis(store["k_sign"][idx][phys], 2, 1)
+
+
+def paged_plane(store: Tree, idx, plane: int, phys: jax.Array) -> jax.Array:
+    """Gather ONE packed magnitude bit-plane of layer ``idx`` for every
+    logical position: phys ``(B, S)`` -> ``(B, Hk, S, D/8)`` heads-major.
+
+    Phase 1 of the two-phase BGPP decode (round 0): only the MSB plane is
+    fetched at full sequence width — 1/8 of the int8 K bytes and ~1/16 of
+    a bf16 row — so the progressive predictor never touches the rest of
+    the pool.
+    """
+    return jnp.moveaxis(store["k_planes"][idx, plane][phys], 2, 1)
+
+
+def paged_rows_at(phys: jax.Array, idx: jax.Array) -> jax.Array:
+    """Translate per-head logical indices through the gather map: phys
+    ``(B, S)``, idx ``(B, Hk, k)`` logical positions -> ``(B, Hk, k)``
+    physical pool rows (unmapped positions were already clamped to row 0
+    by :func:`phys_table`; callers mask those lanes by validity)."""
+    B, Hk, k = idx.shape
+    return jnp.take_along_axis(phys, idx.reshape(B, Hk * k), axis=1).reshape(
+        B, Hk, k
+    )
+
+
+def _gather_rows_per_head(al: jax.Array, rows: jax.Array, planar: bool):
+    """Compacted per-(slot, head) pool gather: for each KV head ``h``,
+    fetch ONLY head ``h``'s slice of pool rows ``rows[:, h]`` — the
+    surviving-token fetch of BGPP phase 2, which reads ``k`` token-rows'
+    worth of bytes total rather than ``k`` whole-head rows per head.
+
+    al: ``(n_tok, Hk, ...)`` (or ``(NBITS, n_tok, Hk, ...)`` when
+    ``planar``); rows: ``(B, Hk, k)`` physical rows.  Returns
+    ``(B, Hk, k, ...)`` (planar: ``(NBITS, B, Hk, k, ...)``).
+    """
+    heads = jnp.arange(rows.shape[1])
+    if planar:
+        return jax.vmap(
+            lambda r, h: al[:, r, h], in_axes=(1, 0), out_axes=2
+        )(rows, heads)
+    return jax.vmap(
+        lambda r, h: al[r, h], in_axes=(1, 0), out_axes=1
+    )(rows, heads)
+
+
+def paged_plane_rows(store: Tree, idx, plane: int, rows: jax.Array) -> jax.Array:
+    """Gather ONE packed magnitude plane at surviving physical rows only:
+    rows ``(B, Hk, k)`` -> ``(B, Hk, k, D/8)``.
+
+    Phase-1 progressive rounds r >= 1: each later round fetches the next
+    plane for the shrinking candidate set (paper's early termination) —
+    the plane bytes read scale with survivors, not the cache width.
+    """
+    return _gather_rows_per_head(store["k_planes"][idx, plane], rows, False)
+
+
+def paged_topk_entry(store: Tree, idx, rows: jax.Array) -> Tree:
+    """Phase-2 gather: the surviving tokens' FULL-precision bgpp rows,
+    compacted.  rows ``(B, Hk, k)`` physical pool rows -> a heads-major
+    entry ``{k_planes (NBITS, B, Hk, k, D/8), k_sign (B, Hk, k, D/8),
+    k_scale (B, Hk, k), v (B, Hk, k, D), v_scale (B, Hk, k)}``.
+
+    This is the only point of paged BGPP decode that touches full-precision
+    K/V, and it reads exactly ``k = ceil(keep_ratio * S)`` token-rows per
+    slot (each of the ``Hk`` per-head gathers fetches 1/Hk of a row).  The
+    gathered values are bit-identical to slicing the same logical indices
+    out of :func:`paged_entry`'s full view, which is what keeps the
+    two-phase attend's logits equal to the full-gather path
+    (tests/test_bgpp_gather.py).
+    """
+    return {
+        n: _gather_rows_per_head(a[idx], rows, n == "k_planes")
+        for n, a in store.items()
+    }
+
+
 def identity_page_table(layout: CacheLayout) -> jax.Array:
     """Slot-major mapping (slot b, page j) -> physical page b*n+j — the
     trivial table whole-batch prefill uses when no allocator is driving."""
@@ -457,6 +551,113 @@ def page_bytes(store: Tree, page_size: int) -> int:
         n_tok = a.shape[_tok_dim(n)]
         total += a.size * a.dtype.itemsize * page_size // n_tok
     return total
+
+
+# --------------------------------------------------------------------------
+# KV-read accounting — bytes the jitted steps gather from the KV stores
+# --------------------------------------------------------------------------
+#
+# Host-side mirrors of the device gathers, computed from the SAME static
+# shapes the jitted steps address (B rows × layer stacks × the per-format
+# row bytes; for bgpp, the two-phase plan: sign + MSB plane at full width,
+# one shrinking survivor plane per progressive round, then ceil(keep·S)
+# full-precision rows).  The scheduler accumulates these per executed step
+# into ``Scheduler.stats()["kv_read"]`` — the counter the serving
+# benchmarks and launchers report, and the one the acceptance assert
+# (paged bgpp reads bit-planes + at most k_max full rows) checks against.
+
+
+def _cache_dtype_bytes(cfg) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def _token_row_bytes(cfg, fmt: str) -> float:
+    """Bytes one token's KV row (all ``Hk`` heads, K and V sides plus any
+    scales) occupies in a stack of format ``fmt``."""
+    Hk, Dh = cfg.num_kv_heads, cfg.head_dim
+    if fmt == "bf16":
+        return Hk * Dh * _cache_dtype_bytes(cfg) * 2.0
+    if fmt == "int8":
+        return Hk * (2.0 * Dh + 8.0)  # int8 K+V, two f32 scales
+    if fmt == "bgpp":
+        # packed magnitude planes + sign plane + f32 k_scale + int8 V + f32
+        # v_scale — the FULL row phase 2 fetches per surviving token
+        return Hk * (NBITS * Dh / 8.0 + Dh / 8.0 + 4.0 + Dh + 4.0)
+    raise ValueError(fmt)
+
+
+def bgpp_decode_plan(S: int, cfg) -> Tuple[int, int, Tuple[int, ...]]:
+    """Static shapes of one two-phase BGPP decode attend over ``S`` cache
+    lanes, per (row, layer): ``(rounds, k_max, survivors)`` with
+    ``survivors[r]`` the candidate-set width whose plane round ``r``
+    fetches (``S`` at round 0, then ``max(k_max, S >> r)``).
+
+    This is THE definition of the plan: ``engine._bgpp_topk_indices``
+    takes its round/top-k widths from here, and :func:`decode_read_bytes`
+    prices the same tuple — so the reported counter can never drift from
+    the shapes the engine actually gathers."""
+    mo = cfg.mcbp
+    rounds = max(1, min(mo.bgpp_rounds, NBITS))
+    k_max = max(1, min(S, int(math.ceil(mo.bgpp_keep_ratio * S))))
+    survivors = (S,) + tuple(max(k_max, S >> r) for r in range(1, rounds))
+    return rounds, k_max, survivors
+
+
+def decode_read_bytes(layout: CacheLayout, cfg) -> Dict[str, Any]:
+    """KV bytes ONE batched ``serve_step`` gathers, at its static shapes.
+
+    All ``layout.batch`` rows and every cached layer are counted (the
+    jitted step gathers them regardless of slot liveness — static shapes).
+    Global bf16/int8 stacks read the full ``(S_max,)`` row; local rings
+    read their ``window``; bgpp global stacks follow the two-phase plan:
+    sign + MSB plane everywhere, shrinking survivor planes, then exactly
+    ``k_max = ceil(bgpp_keep_ratio * S_max)`` full-precision token rows
+    per (slot, layer) — reported under ``"bgpp"`` so callers can assert
+    the full-row fetch never exceeds the keep ratio.  ``"bf16_equiv"`` is
+    what a bf16 cache of the same geometry would read — the reduction
+    denominator the benchmarks report.
+    """
+    B, S, W = layout.batch, layout.max_seq, layout.local_window
+    ng, nl = len(layout.global_layers), len(layout.local_layers)
+    out: Dict[str, Any] = {"global": 0.0, "local": 0.0}
+    if ng:
+        if layout.kv_format == "bgpp":
+            rounds, k_max, survivors = bgpp_decode_plan(S, cfg)
+            plane_row = cfg.num_kv_heads * cfg.head_dim / 8.0
+            sign = S * plane_row
+            planes = float(sum(survivors)) * plane_row
+            topk_full = k_max * _token_row_bytes(cfg, "bgpp")
+            out["bgpp"] = {
+                "rounds": rounds,
+                "full_rows_per_slot": k_max,
+                "sign_bytes": B * ng * sign,
+                "plane_bytes": B * ng * planes,
+                "topk_full_bytes": B * ng * topk_full,
+            }
+            out["global"] = B * ng * (sign + planes + topk_full)
+        else:
+            out["global"] = B * ng * S * _token_row_bytes(cfg, layout.kv_format)
+    if nl:
+        fmt_l = "int8" if layout.kv_format == "bgpp" else layout.kv_format
+        out["local"] = B * nl * W * _token_row_bytes(cfg, fmt_l)
+    out["total"] = out["global"] + out["local"]
+    out["bf16_equiv"] = (B * ng * S + B * nl * W) * _token_row_bytes(cfg, "bf16")
+    return out
+
+
+def chunk_read_bytes(layout: CacheLayout, cfg) -> Dict[str, float]:
+    """KV bytes ONE chunked-prefill step reads from the live cache (one
+    slot): global layers attend the full ``(S_max,)`` row at full precision
+    — BGPP's progressive prediction is a decode-time saving; prefill
+    reconstructs exact int8 K from every plane — and local ring layers
+    gather their ``window``.  Eager admission reads nothing (the B=1
+    forward self-attends without touching the cache)."""
+    S, W = layout.max_seq, layout.local_window
+    ng, nl = len(layout.global_layers), len(layout.local_layers)
+    fmt_l = "int8" if layout.kv_format == "bgpp" else layout.kv_format
+    g = ng * S * _token_row_bytes(cfg, layout.kv_format)
+    loc = nl * W * _token_row_bytes(cfg, fmt_l)
+    return {"global": g, "local": loc, "total": g + loc}
 
 
 # --------------------------------------------------------------------------

@@ -76,6 +76,7 @@ class PageAllocator:
 
     @property
     def pages_in_use(self) -> int:
+        """Physical pages currently mapped by at least one slot."""
         return self.num_pages - len(self._free)
 
     def _alloc(self) -> int:
@@ -163,7 +164,20 @@ class PageAllocator:
         """Longest indexed, still-resident prefix of ``tokens`` covering at
         most ``len(tokens) - 1`` of them.  Stale entries (a backing page
         was freed — generation moved on) are pruned on sight.  Returns
-        ``(n_tokens, page_ids)`` (``(0, ())`` on miss)."""
+        ``(n_tokens, page_ids)`` (``(0, ())`` on miss).
+
+        The three legality rules of prefix reuse (each enforced here or by
+        the scheduler, property-tested in tests/test_paging.py):
+
+        * **full pages only** — only page-aligned, fully-written prompt
+          prefixes are ever indexed (``register_prefix``), so a shared
+          page is never written again by any adopter;
+        * **resident donor** — every backing page must still be refcounted
+          at its registration generation; freed pages can never resurrect;
+        * **global-only stacks** — the scheduler offers reuse only when
+          the layout has no sliding-window ring layers, which discard the
+          very positions a reused slot would need.
+        """
         for k in range((len(tokens) - 1) // self.page_size, 0, -1):
             d = self._digest(tokens, k * self.page_size)
             hit = self._prefix.get(d)

@@ -24,6 +24,8 @@ import numpy as np
 
 
 class SlotState(enum.Enum):
+    """Slot lifecycle states (EMPTY -> PREFILLING -> DECODING -> DONE)."""
+
     EMPTY = "empty"
     PREFILLING = "prefilling"
     DECODING = "decoding"
@@ -63,14 +65,17 @@ class Request:
 
     @property
     def prompt_len(self) -> int:
+        """Prompt length in tokens."""
         return int(len(self.prompt))
 
     @property
     def queue_wait_steps(self) -> int:
+        """Scheduler steps spent queued between arrival and admission."""
         return self.admitted_step - self.arrival_step
 
     @property
     def latency_steps(self) -> int:
+        """Scheduler steps from arrival to the last generated token."""
         return self.finished_step - self.arrival_step
 
     @property
@@ -117,6 +122,7 @@ class Slot:
 
     @property
     def live(self) -> bool:
+        """Whether the slot holds an admitted request (occupied capacity)."""
         return self.state in (SlotState.PREFILLING, SlotState.DECODING)
 
 

@@ -140,6 +140,16 @@ class Scheduler:
         self.finished: List[Request] = []
         self.occupancy: List[float] = []  # busy slots / slots, per step
         self.decoded_tokens = 0
+        # KV-read accounting: host-side mirrors of the jitted steps' static
+        # gather shapes (kv_cache.decode_read_bytes / chunk_read_bytes),
+        # accumulated once per executed decode / chunk step.  For bgpp
+        # this is the two-phase plan — bit-planes plus at most
+        # ceil(keep_ratio·S) full-precision rows per (slot, layer) — the
+        # counter stats()["kv_read"] and the serving benchmarks report.
+        self._decode_read = kvc.decode_read_bytes(layout, cfg)
+        self._chunk_read = kvc.chunk_read_bytes(layout, cfg)
+        self.decode_steps = 0
+        self.kv_bytes_read = {"decode": 0.0, "prefill": 0.0}
         # audit trail for the chunk-budget contract: valid prompt tokens
         # prefilled between this step's admission and its decode
         self.prefill_tokens_per_step: List[int] = []
@@ -211,6 +221,7 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def submit(self, request: Request) -> None:
+        """Queue one request (FIFO among arrived; see ``Request.arrival_step``)."""
         # reject malformed prompts at the API boundary: admission would
         # otherwise die mid-loop and take every in-flight request with it
         if not 0 < request.prompt_len < self.layout.max_seq:
@@ -224,6 +235,7 @@ class Scheduler:
 
     @property
     def num_pending(self) -> int:
+        """Requests not yet finished: queued plus live in a slot."""
         return len(self.queue) + sum(1 for s in self.slots if s.live)
 
     def _next_arrived(self) -> Optional[Request]:
@@ -327,6 +339,7 @@ class Scheduler:
                 req.prompt[slot.prefill_pos:slot.prefill_pos + take],
                 slot.prefill_pos,
             )
+            self.kv_bytes_read["prefill"] += self._chunk_read["total"]
             slot.prefill_pos += n
             spent += n
         if self.pager is not None and not self.layout.local_layers:
@@ -403,6 +416,8 @@ class Scheduler:
         )
         rows = np.asarray(logits[:, -1], np.float32)
         self.step_count += 1
+        self.decode_steps += 1
+        self.kv_bytes_read["decode"] += self._decode_read["total"]
         self.decoded_tokens += len(live)
         now = time.perf_counter()
         for slot in live:
@@ -426,6 +441,11 @@ class Scheduler:
         return self.stats(time.perf_counter() - t0)
 
     def stats(self, wall_s: Optional[float] = None) -> Dict:
+        """Aggregate serving metrics: throughput/occupancy, TTFT/ITL
+        percentiles, per-request traces, paged-pool accounting (paged
+        layouts), and the ``kv_read`` counter — KV bytes the executed
+        decode / chunk steps gathered, with the bgpp two-phase breakdown
+        and the bf16-equivalent denominator."""
         occ = [o for o in self.occupancy if o > 0] or self.occupancy
         gaps = np.concatenate(
             [r.itl_gaps_s() for r in self.finished]
@@ -445,6 +465,21 @@ class Scheduler:
             "itl_s": _percentiles(gaps),
             "requests": [r.trace_record() for r in self.finished],
         }
+        dr = self._decode_read
+        out["kv_read"] = {
+            "decode_bytes": round(self.kv_bytes_read["decode"]),
+            "prefill_bytes": round(self.kv_bytes_read["prefill"]),
+            "decode_steps": self.decode_steps,
+            "decode_bytes_per_step": round(dr["total"]),
+            "decode_bf16_equiv_bytes_per_step": round(dr["bf16_equiv"]),
+            "decode_bytes_reduction_vs_bf16": round(
+                dr["bf16_equiv"] / dr["total"], 3) if dr["total"] else None,
+        }
+        if "bgpp" in dr:
+            out["kv_read"]["bgpp"] = {
+                n: round(v) if isinstance(v, float) else v
+                for n, v in dr["bgpp"].items()
+            }
         if self.pager is not None:
             pb = self._page_bytes
             out["paged"] = {

@@ -27,6 +27,7 @@ oracle dumps to ``REPRO_FUZZ_TRACE_DIR`` for offline replay.
 import contextlib
 import dataclasses
 import json
+import math
 import os
 
 import numpy as np
@@ -121,36 +122,49 @@ def _dump_failing_trace(meta, reqs):
         raise
 
 
-def _run(cfg, params, layout, reqs, shared=None):
+def _run(cfg, params, layout, reqs, shared=None, admission="chunked"):
     sched = Scheduler(
-        params, cfg, layout, admission="chunked", chunk_budget=CHUNK_BUDGET,
+        params, cfg, layout, admission=admission, chunk_budget=CHUNK_BUDGET,
         record_logits=True, shared_fns=shared,
+        prefill_kw=dict(block_q=16, block_k=32) if admission == "eager" else None,
     )
     for r in reqs:
         sched.submit(r)
     sched.run(max_steps=2000)
     assert len(sched.finished) == len(reqs), "trace did not drain"
-    assert max(sched.prefill_tokens_per_step, default=0) <= CHUNK_BUDGET, (
-        "chunk budget violated between decode steps"
-    )
+    if admission == "chunked":
+        assert max(sched.prefill_tokens_per_step, default=0) <= CHUNK_BUDGET, (
+            "chunk budget violated between decode steps"
+        )
     if sched.pager is not None:
         sched.pager.check()
+    # the kv-read counter must account exactly for the executed steps
+    kv = sched.stats()["kv_read"]
+    assert kv["decode_bytes"] == kv["decode_steps"] * kv["decode_bytes_per_step"]
+    if layout.kv_format == "bgpp":
+        assert kv["bgpp"]["full_rows_per_slot"] <= math.ceil(
+            cfg.mcbp.bgpp_keep_ratio * layout.max_seq
+        ), "bgpp decode may not fetch more full rows than the keep ratio"
     return sched, {r.rid: r for r in sched.finished}
 
 
 def _compare_to_alone_runs(cfg, params, reqs, joint, arch_key, kv_format,
-                           layout, joint_shared=None, slots=SLOTS):
+                           layout, joint_shared=None, slots=SLOTS,
+                           admission="chunked"):
     """Re-run each request alone on the SLOT layout and compare — the slot
     path is the oracle for both layouts.  ``joint_shared``: the joint
     scheduler's compiled fns, reusable only when the joint run itself was
     the slot layout.  ``slots`` must match the joint run's batch: XLA
-    reductions are only bit-stable at a fixed batch shape."""
+    reductions are only bit-stable at a fixed batch shape.  ``admission``
+    must match the joint run's too — eager (whole-forward) and chunked
+    (cache-attend) prefills produce their first-token logits through
+    different float paths, so each admission mode oracles against itself."""
     exact = kv_format == "bf16"
     slot_layout = _layout_for(cfg, kv_format, "slot", slots=slots)
     shared = joint_shared
     for r in reqs:
         alone_sched, alone = _run(cfg, params, slot_layout, [_clone(r, 0)],
-                                  shared=shared)
+                                  shared=shared, admission=admission)
         shared = alone_sched.shared_fns()
         got, want = joint[r.rid], alone[r.rid]
         assert len(got.generated) == len(want.generated)
@@ -175,22 +189,26 @@ def _compare_to_alone_runs(cfg, params, reqs, joint, arch_key, kv_format,
             )
 
 
-def _fuzz_oracle(arch_key, kv_format, seed, n_requests, layout="slot"):
+def _fuzz_oracle(arch_key, kv_format, seed, n_requests, layout="slot",
+                 admission="chunked"):
     seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
     rng = np.random.default_rng(seed)
     cfg, params = _model(arch_key)
     reqs = _random_requests(rng, cfg, n_requests,
                             teacher_forced=kv_format != "bf16")
     meta = {"oracle": "fuzz", "arch": arch_key, "kv_format": kv_format,
-            "layout": layout, "seed": seed}
+            "layout": layout, "admission": admission, "seed": seed}
     with _dump_failing_trace(meta, reqs):
         joint_sched, joint = _run(
             cfg, params, _layout_for(cfg, kv_format, layout),
             [_clone(r, r.arrival_step) for r in reqs],
+            admission=admission,
         )
         _compare_to_alone_runs(
             cfg, params, reqs, joint, arch_key, kv_format, layout,
-            joint_shared=joint_sched.shared_fns() if layout == "slot" else None,
+            joint_shared=joint_sched.shared_fns()
+            if layout == "slot" else None,
+            admission=admission,
         )
 
 
@@ -248,6 +266,20 @@ class TestFuzzOracle:
 
     def test_dense_bgpp(self, rng_seed, layout):
         _fuzz_oracle("dense", "bgpp", rng_seed, 4, layout=layout)
+
+    def test_dense_bgpp_eager(self, rng_seed, layout):
+        # eager whole-prompt admission over the two-phase paged decode:
+        # phase-1 selection sees KV written by the B=1 prefill path, and
+        # the logits must still match slot-layout EAGER alone runs (each
+        # admission mode oracles itself — eager and chunked prefill
+        # produce first-token logits through different float paths)
+        _fuzz_oracle("dense", "bgpp", rng_seed, 3, layout=layout,
+                     admission="eager")
+
+    @pytest.mark.slow
+    def test_dense_bf16_eager(self, rng_seed, layout):
+        _fuzz_oracle("dense", "bf16", rng_seed, 3, layout=layout,
+                     admission="eager")
 
     def test_swa_bf16(self, rng_seed, layout):
         # gemma3 mixes ring + global stacks: paged pools behind the rings
