@@ -6,7 +6,7 @@ plus the paged KV cache under a shared-system-prompt trace.
         [--arch phi4-mini-3.8b] [--slots 2] [--requests 6] [--seed 0] \\
         [--kv-formats bf16,int8,bgpp] [--chunk-budget 8] [--quick] \\
         [--page-size 8] [--shared-prefix 16] \\
-        [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
+        [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] [--mesh 2,4] \\
         [--baseline BENCH_serving.json] [--out BENCH_serving.json]
 
 All runtimes drive the SAME jitted serve_step and the same seeded request
@@ -34,6 +34,15 @@ WELL under the bf16 row — that ordering is part of the gate.  Runs on CPU
 via interpret-mode kernel dispatch (auto-detected off-TPU).  CSV on stdout
 per the benchmark contract; ``--out`` writes the JSON consumed as the
 BENCH_serving baseline.
+
+``--mesh DATA,MODEL`` runs every scheduler sharded over a device mesh (KV
+pools heads-parallel on ``model``, slots on ``data``; needs data*model
+visible devices) and the emitted rows gain per-device and interconnect
+kv-bytes columns.  With or without the flag, each format's baseline entry
+carries ``kv_read_mesh`` — the static per-mesh decode-read pricing for
+1x1 / 2x1 / 1x4 / 2x4 (total, per-device share, attend all-gather + paged
+write-broadcast interconnect) — plus a ``sharded_smoke`` section pinning
+the single-device occupancy the CI meshed launcher smoke is gated on.
 
   paged    — the chunked scheduler on the paged KV layout (pooled pages +
              page table + hash-based prefix reuse), driven by a trace whose
@@ -77,6 +86,7 @@ from repro.configs import (  # noqa: E402
 )
 from repro.models import model_zoo  # noqa: E402
 from repro.serving import engine, kv_cache as kvc  # noqa: E402
+from repro.serving import sharded as shd  # noqa: E402
 from repro.serving.request import poisson_trace  # noqa: E402
 from repro.serving.scheduler import Scheduler  # noqa: E402
 
@@ -85,13 +95,35 @@ from repro.serving.scheduler import Scheduler  # noqa: E402
 OCC_TOLERANCE = 0.02  # absolute mean-occupancy drop allowed vs baseline
 ITL_RATIO_FACTOR = 4.0  # chunked/eager itl_p95 ratio growth allowed
 
+# mesh points priced in every baseline (static — the kv-read counter IS the
+# gather plan, so no devices are needed to price a mesh shape)
+MESH_POINTS = ((1, 1), (2, 1), (1, 4), (2, 4))
+
+
+def mesh_kv_entries(layout, cfg):
+    """Per-mesh decode-read breakdown: total, per-device share, and the
+    interconnect bytes (attend all-gather + paged write broadcast) a sharded
+    serve_step moves per decode step."""
+    out = {}
+    for d, m in MESH_POINTS:
+        r = kvc.decode_read_bytes(layout, cfg, (d, m))
+        out[f"{d}x{m}"] = {
+            "decode_bytes_per_step": round(r["total"]),
+            "per_device_bytes_per_step": round(r["per_device"]["total"]),
+            "kv_shards": r["per_device"]["shards"],
+            "interconnect": {k: round(v)
+                             for k, v in r["interconnect"].items()},
+        }
+    return out
+
 
 def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
-                  shared=None):
+                  shared=None, rules=None):
+    kw = {} if rules is None else {"rules": rules}
     sched = Scheduler(params, cfg, layout, admission=admission,
                       chunk_budget=chunk_budget,
                       prefill_kw=dict(block_q=16, block_k=32),
-                      shared_fns=shared)
+                      shared_fns=shared, **kw)
     for r in reqs:
         sched.submit(r)
     t0 = time.perf_counter()
@@ -116,6 +148,11 @@ def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
         "decode_kv_bytes_per_step": kv["decode_bytes_per_step"],
         "decode_kv_bytes_reduction_vs_bf16":
             kv["decode_bytes_reduction_vs_bf16"],
+        "kv_shards": kv["kv_shards"],
+        "decode_kv_bytes_per_device_per_step":
+            kv["decode_bytes_per_device_per_step"],
+        "interconnect_bytes_per_step": kv["interconnect_bytes_per_step"],
+        "interconnect_bytes": kv["interconnect_bytes"],
     }
     if "bgpp" in kv:
         out["bgpp_full_rows_per_slot"] = kv["bgpp"]["full_rows_per_slot"]
@@ -208,7 +245,18 @@ def main():
                          f"ratio x{ITL_RATIO_FACTOR})")
     ap.add_argument("--out", default=None,
                     help="write the JSON baseline (e.g. BENCH_serving.json)")
+    ap.add_argument("--mesh", default=None,
+                    help="DATA,MODEL mesh shape (e.g. 2,4): run the "
+                         "schedulers sharded over a device mesh (needs "
+                         "data*model devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8).  "
+                         "Static per-mesh kv-read entries are priced in "
+                         "the baseline regardless of this flag")
     args = ap.parse_args()
+    rules = None
+    if args.mesh:
+        mesh_dm = shd.parse_mesh_arg(args.mesh)
+        rules = shd.rules_for(*mesh_dm)
 
     cfg = apply_bgpp_overrides(
         get_config(args.arch, smoke=True),
@@ -226,7 +274,7 @@ def main():
     ok = True
     for fmt in formats:
         layout = kvc.layout_for(cfg, args.slots, args.max_seq, kv_format=fmt)
-        entry = {}
+        entry = {"kv_read_mesh": mesh_kv_entries(layout, cfg)}
         shared = None
         runtimes = ["chunked", "eager"] + ([] if args.quick else ["lockstep"])
         for runtime in runtimes:
@@ -236,14 +284,17 @@ def main():
                                  min_new=max(2, args.max_new // 3),
                                  max_prompt=min(23, args.max_seq - 2))
             if runtime == "lockstep":
+                # lockstep prefills an unsharded cache itself, so never
+                # feed it a mesh-jitted serve_step
                 entry[runtime] = run_lockstep(
                     params, cfg, layout, reqs,
-                    serve_step=shared["serve_step"] if shared else None,
+                    serve_step=shared["serve_step"]
+                    if shared and rules is None else None,
                 )
             else:
                 entry[runtime], shared = run_scheduler(
                     params, cfg, layout, reqs, runtime, args.chunk_budget,
-                    shared=shared,
+                    shared=shared, rules=rules,
                 )
             r = entry[runtime]
             us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
@@ -252,6 +303,9 @@ def main():
                 extra = (f";ttft_p95={r['ttft_s_p95']}"
                          f";itl_p95={r['itl_s_p95']}"
                          f";kv_step={r['decode_kv_bytes_per_step']}")
+                if rules is not None:
+                    extra += (f";kv_dev={r['decode_kv_bytes_per_device_per_step']}"
+                              f";ic_step={r['interconnect_bytes_per_step']}")
             emit(f"serving_{fmt}_{runtime}", us,
                  f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
                  + extra)
@@ -281,6 +335,18 @@ def main():
             ok = False
         if "lockstep" in entry and entry["occupancy_gain"] <= 0:
             ok = False
+        if rules is not None:
+            # the live counter must agree with the static per-mesh pricing:
+            # a mesh the pricing says moves interconnect bytes (model-axis
+            # head shards) must report them from the actual run
+            want_ic = entry["kv_read_mesh"][
+                f"{mesh_dm[0]}x{mesh_dm[1]}"]["interconnect"]["total"]
+            got_ic = entry["chunked"]["interconnect_bytes"]
+            if (want_ic > 0) != (got_ic > 0):
+                print(f"# REGRESSION {fmt}: static mesh pricing says "
+                      f"{want_ic} interconnect B/step but the live run "
+                      f"counted {got_ic} B total")
+                ok = False
 
         if not args.quick:
             # paged layout under a shared-system-prompt trace: later
@@ -299,7 +365,9 @@ def main():
                                       page_size=args.page_size)
             entry["paged"], _ = run_scheduler(
                 params, cfg, layout_p, preqs, "chunked", args.chunk_budget,
+                rules=rules,
             )
+            entry["paged"]["kv_read_mesh"] = mesh_kv_entries(layout_p, cfg)
             r = entry["paged"]
             us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
             emit(f"serving_{fmt}_paged", us,
@@ -336,6 +404,36 @@ def main():
     if 2 * b_bytes > f_bytes:
         print("# REGRESSION: bgpp decode reads are not well under bf16's")
         ok = False
+
+    if not args.quick:
+        # committed single-device reference for the CI sharded-serving
+        # launcher smoke: the exact trace launch/serve.py runs at
+        # --arch deepseek-7b --mesh 2,4 (the smoke arch whose head counts
+        # divide model=4).  Occupancy is host-side scheduling, so it is
+        # mesh-invariant — CI pins the meshed launcher run to this number
+        # within OCC_TOLERANCE — and the static 2x4 entry prices the
+        # interconnect bytes that run must report as > 0.
+        scfg = get_config("deepseek-7b", smoke=True)
+        sparams, _ = model_zoo.init(jax.random.key(0), scfg)
+        slayout = kvc.layout_for(scfg, 4, 128, kv_format="bf16")
+        rng = np.random.default_rng(args.seed)
+        sreqs = poisson_trace(rng, 4, scfg.vocab_size, 8, 2.0,
+                              max_prompt=23)
+        smoke, _ = run_scheduler(sparams, scfg, slayout, sreqs,
+                                 "chunked", 16)
+        results["sharded_smoke"] = {
+            "arch": "deepseek-7b", "kv_format": "bf16", "kv_layout": "slot",
+            "slots": 4, "requests": 4, "max_new": 8, "max_seq": 128,
+            "chunk_budget": 16, "arrival_rate": 2.0, "seed": args.seed,
+            "mean_occupancy": smoke["mean_occupancy"],
+            "kv_read_mesh": mesh_kv_entries(slayout, scfg),
+        }
+        sm = results["sharded_smoke"]["kv_read_mesh"]["2x4"]
+        print(f"# sharded_smoke (deepseek-7b, 4 slots, bf16 slot): "
+              f"occupancy {smoke['mean_occupancy']:.3f}; 2x4 = "
+              f"{sm['per_device_bytes_per_step']} B/device/step over "
+              f"{sm['kv_shards']} shards + {sm['interconnect']['total']} "
+              f"interconnect B/step")
 
     if args.baseline:
         with open(args.baseline) as f:

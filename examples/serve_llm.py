@@ -5,7 +5,7 @@ bit-planar BGPP KV cache).
     PYTHONPATH=src python examples/serve_llm.py [--arch phi4-mini-3.8b]
         [--kv-format int8|bf16|bgpp] [--admission chunked|eager]
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16]
-        [--chunk-budget 8] [--steps 24] [--batch 4]
+        [--chunk-budget 8] [--steps 24] [--batch 4] [--mesh 2,4]
 
 Each request is admitted into its own slot of ONE live cache — by default
 through fixed-shape prefill chunks (``engine.ChunkedPrefill``, jitted once
@@ -27,6 +27,7 @@ import jax
 from repro.configs import ARCH_REGISTRY, apply_bgpp_overrides, get_config
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
+from repro.serving import sharded as shd
 from repro.serving.request import Request
 from repro.serving.scheduler import Scheduler
 
@@ -52,6 +53,12 @@ def main():
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--mesh", default=None,
+                    help="DATA,MODEL mesh shape (e.g. 2,4) to shard the "
+                         "serve_step: KV pools heads-parallel on model, "
+                         "slots on data.  Needs data*model devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 on CPU); default single-device")
     args = ap.parse_args()
 
     cfg = apply_bgpp_overrides(
@@ -68,9 +75,13 @@ def main():
     layout = kvc.layout_for(cfg, args.batch, max_seq + args.shared_prefix,
                             kv_format=args.kv_format,
                             layout=args.kv_layout, page_size=args.page_size)
+    kw = {}
+    if args.mesh:
+        d, m = shd.parse_mesh_arg(args.mesh)
+        kw["rules"] = shd.rules_for(d, m)
     sched = Scheduler(params, cfg, layout, admission=args.admission,
                       chunk_budget=args.chunk_budget,
-                      prefill_kw=dict(block_q=16, block_k=32))
+                      prefill_kw=dict(block_q=16, block_k=32), **kw)
     print(f"[serve] cache: {kvc.cache_bytes(sched.cache)/1e6:.2f} MB "
           f"({len(layout.global_layers)} global / "
           f"{len(layout.local_layers)} local layers)")
@@ -112,6 +123,11 @@ def main():
           f"bf16-equivalent ({kv['decode_bytes_reduction_vs_bf16']}x); "
           f"bgpp full rows/slot/layer: "
           f"{kv.get('bgpp', {}).get('full_rows_per_slot', '-')}")
+    if args.mesh:
+        print(f"[serve] mesh {kv['mesh']['data']}x{kv['mesh']['model']}: "
+              f"{kv['decode_bytes_per_device_per_step']/1e3:.1f} kB/device/"
+              f"step over {kv['kv_shards']} kv shards, interconnect "
+              f"{kv['interconnect_bytes_per_step']/1e3:.2f} kB/step")
     if "paged" in stats:
         pg = stats["paged"]
         print(f"[serve] paged: prefix hit rate {pg['prefix_hit_rate']:.3f}, "

@@ -19,6 +19,7 @@ parallelism over "data" (+"pod").  Strategy knobs:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -42,6 +43,16 @@ CONV = "conv"
 STATE = "state"
 VISION = "vision"
 NONE = None
+
+
+class ShardingFallbackWarning(UserWarning):
+    """A logical axis could not shard its dim and was silently replicated.
+
+    Raised (as a warning, not an error) by :meth:`ShardingRules
+    .spec_for_shape` so a mis-sized tensor — e.g. a KV pool whose head axis
+    does not divide the ``"model"`` mesh axis — shows up in logs instead of
+    masquerading as a correctly sharded one.  Divisibility fallback remains
+    the *behaviour*; the warning only adds the missing signal."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,7 +163,20 @@ class ShardingRules:
             total = 1
             for a in axes:
                 total *= sizes[a]
-            if any(a in used for a in axes) or dim % total != 0:
+            if any(a in used for a in axes):
+                out.append(None)
+                continue
+            if dim % total != 0:
+                # dim == 1 is "nothing to shard" (B=1 chunk prefill, squeezed
+                # axes) — only a real size mismatch warrants the signal
+                if dim > 1:
+                    warnings.warn(
+                        f"logical axis {logical!r} (dim {dim}) is not "
+                        f"divisible by mesh axes {tuple(axes)} (size {total})"
+                        "; replicating instead",
+                        ShardingFallbackWarning,
+                        stacklevel=2,
+                    )
                 out.append(None)
                 continue
             used.update(axes)

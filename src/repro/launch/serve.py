@@ -6,7 +6,7 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
         [--admission chunked|eager] [--chunk-budget 16] \\
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
-        [--trace-out trace.json] [--data 1 --model 1]
+        [--trace-out trace.json] [--mesh 2,4 | --data 1 --model 1]
 
 Requests arrive on a Poisson-ish trace with distinct prompt lengths and
 decode budgets.  With the default ``--admission chunked`` the scheduler
@@ -43,6 +43,7 @@ from repro.distributed import sharding as sh
 from repro.launch.mesh import make_debug_mesh
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
+from repro.serving import sharded as shd
 from repro.serving.request import poisson_trace
 from repro.serving.scheduler import Scheduler
 
@@ -87,7 +88,14 @@ def main():
                     help="write per-request latency/throughput JSON here")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="DATA,MODEL device-mesh shape (e.g. 2,4); overrides "
+                         "--data/--model.  Needs data*model visible devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                         "on CPU)")
     args = ap.parse_args()
+    if args.mesh:
+        args.data, args.model = shd.parse_mesh_arg(args.mesh)
 
     cfg = apply_bgpp_overrides(
         get_config(args.arch, smoke=True),
@@ -145,6 +153,13 @@ def main():
           f"{kv['decode_bytes_per_step']/1e3:.1f} kB/decode-step "
           f"(bf16-equivalent {kv['decode_bf16_equiv_bytes_per_step']/1e3:.1f}"
           f" kB, {kv['decode_bytes_reduction_vs_bf16']}x reduction)")
+    print(f"[serve] mesh {kv['mesh']['data']}x{kv['mesh']['model']} "
+          f"({kv['kv_shards']} kv shards): "
+          f"{kv['decode_bytes_per_device_per_step']/1e3:.1f} kB/device/step, "
+          f"interconnect {kv['interconnect_bytes_per_step']/1e3:.2f} kB/step "
+          f"({kv['interconnect_bytes']/1e6:.2f} MB total: attend all-gather "
+          f"{kv['interconnect']['attend_allgather']/1e3:.2f} kB/step + paged "
+          f"write bcast {kv['interconnect']['paged_write_bcast']/1e3:.2f})")
     if "bgpp" in kv:
         bg = kv["bgpp"]
         print(f"[serve] bgpp two-phase: {bg['rounds']} rounds, "
@@ -168,6 +183,7 @@ def main():
             "requests": args.requests, "max_new": args.max_new,
             "admission": args.admission, "chunk_budget": args.chunk_budget,
             "arrival_rate": args.arrival_rate, "seed": args.seed,
+            "mesh": [args.data, args.model],
             "bgpp_rounds": cfg.mcbp.bgpp_rounds,
             "bgpp_keep_ratio": cfg.mcbp.bgpp_keep_ratio,
         }

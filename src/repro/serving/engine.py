@@ -63,8 +63,11 @@ def _cache_attend(
     ``(B, Q, Hq, Dh)``.
     """
     B, Q, Hq, Dh = q.shape
-    Hk = cfg.num_kv_heads
-    g = Hq // Hk
+    # GQA group size from the config RATIO, head count from the operand:
+    # under shard_map (the paged BGPP decode's "model" routing) q carries
+    # only this device's head shard, and the ratio is shard-invariant
+    g = cfg.num_heads // cfg.num_kv_heads
+    Hk = Hq // g
     scale = Dh**-0.5
     qg = q.reshape(B, Q, Hk, g, Dh).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
 
@@ -125,8 +128,9 @@ def _bgpp_quant_query(q, cfg):
     precompute, shared by the slot and paged BGPP decode paths).
     """
     B, Hq, Dh = q.shape
-    Hk = cfg.num_kv_heads
-    g = Hq // Hk
+    # ratio from the config, count from the operand (shard_map-local safe)
+    g = cfg.num_heads // cfg.num_kv_heads
+    Hk = Hq // g
     qg = q.reshape(B, Hk, g, Dh).astype(jnp.float32)
     dq = jnp.maximum(jnp.max(jnp.abs(qg), axis=-1, keepdims=True), 1e-8) / 127.0
     q_int = jnp.clip(jnp.round(qg / dq), -127, 127).astype(jnp.int32)
@@ -298,7 +302,61 @@ def _bgpp_paged_decode_attend(q, store, gi, phys, valid, cfg):
         valid, cfg,
     )
     gathered = kvc.paged_topk_entry(store, gi, kvc.paged_rows_at(phys, idx))
+    # materialize the compacted survivor rows before the formal compute so
+    # the pool gather can't fuse into the attend (sharding-stable lowering,
+    # same reasoning as the dense paged_entry barrier in the decode layer)
+    gathered = jax.lax.optimization_barrier(gathered)
     return _bgpp_formal_attend(q, gathered, idx_valid, cfg)
+
+
+def _bgpp_paged_decode_attend_sharded(q, store, gi, phys, valid, cfg, layout,
+                                      rules):
+    """Route the two-phase paged BGPP decode device-local per head shard.
+
+    Left to GSPMD, the progressive plane gathers and ``top_k`` selections
+    of phase 1 get partitioned by REPLICATING the head axis — all-gathers
+    of the plane pools across ``"model"`` on every round, exactly the
+    cross-shard traffic the two-phase split exists to avoid.  With a mesh
+    attached this wraps the whole attend in ``shard_map``: each device runs
+    phase 1 + top-k + the phase-2 survivor gather on its own head shard of
+    the pool (batch likewise over ``"data"``), introducing no collective at
+    all — the head outputs rejoin at the decode layer's attend-reduction
+    all-gather like every other format.  tests/test_multidevice.py pins
+    this structurally (no collective in the compiled body).
+
+    Falls back to the plain call when there is no mesh, the model axis is
+    trivial, or the head counts don't divide it (the same divisibility
+    fallback the cache placement applies — the pool is then replicated and
+    there is nothing to keep local).
+    """
+    mesh = getattr(rules, "mesh", None)
+    run = lambda q_, store_, phys_, valid_: _bgpp_paged_decode_attend(
+        q_, store_, gi, phys_, valid_, cfg
+    )
+    if mesh is None:
+        return run(q, store, phys, valid)
+    m = dict(mesh.shape).get(rules.model_axis, 1)
+    if m <= 1 or cfg.num_kv_heads % m or cfg.num_heads % m:
+        return run(q, store, phys, valid)
+    from jax.experimental.shard_map import shard_map
+
+    spec = lambda axes, x: rules.spec_for_shape(mesh, axes, x.shape)
+    store_spec = jax.tree.map(
+        lambda axes, x: spec(tuple(axes), x),
+        kvc.cache_specs(cfg, layout)["global"], store,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return shard_map(
+        run, mesh=mesh,
+        in_specs=(
+            spec((sh.BATCH, sh.HEADS, None), q),
+            store_spec,
+            spec((sh.BATCH, None), phys),
+            spec((sh.BATCH, None), valid),
+        ),
+        out_specs=spec((sh.BATCH, sh.HEADS, None), q),
+        check_rep=False,
+    )(q, store, phys, valid)
 
 
 # --------------------------------------------------------------------------
@@ -332,6 +390,11 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
         p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
         positions if use_rope else None, theta, qk_norm=cfg.qk_norm,
     )
+    # heads-parallel decode: q/k/v shard over "model" so the cache write
+    # and the whole attend stay device-local per head shard (no-op off-mesh)
+    q = sh.constrain(q, rules, (sh.BATCH, None, sh.HEADS, None))
+    k = sh.constrain(k, rules, (sh.BATCH, None, sh.KV_HEADS, None))
+    v = sh.constrain(v, rules, (sh.BATCH, None, sh.KV_HEADS, None))
     kind, w = cfg.layer_attn_window(layer_idx)
     is_local = layer_idx in layout.local_layers
     pos_c = pos[:, None]  # (B, 1) for masks against (B, S) position grids
@@ -360,12 +423,20 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
             )
             if fmt == "bgpp":
                 # two-phase attend: bit-planes first, then only the top-k
-                # survivors' full rows — never the whole paged row
-                out = _bgpp_paged_decode_attend(
-                    q[:, 0], cache["global"], gi, phys, valid, cfg
+                # survivors' full rows — never the whole paged row; on a
+                # mesh the whole thing runs shard_map'd per head shard
+                out = _bgpp_paged_decode_attend_sharded(
+                    q[:, 0], cache["global"], gi, phys, valid, cfg,
+                    layout, rules,
                 )
             else:
                 entry = kvc.paged_entry(cache["global"], gi, phys)
+                # pin the gathered view as a materialization point: without
+                # it XLA fuses the page gather INTO the attend, and the
+                # fused lowering's float reduction order shifts once any
+                # program input is sharded — the barrier keeps sharded and
+                # single-device decode bit-identical (sharding-parity fuzz)
+                entry = jax.lax.optimization_barrier(entry)
                 out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
         else:
             cache["global"] = kvc.write_token(cache["global"], gi, k, v, pos)
@@ -376,7 +447,13 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
             else:
                 out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
 
-    out = out.reshape(B, 1, -1) @ p["attn"]["wo"]
+    # the attend reduction's ONLY collective: all-gather the per-head f32
+    # outputs across "model" before the replicated wo contraction.  Pure
+    # data movement (no psum splits a float reduction), so sharded decode
+    # stays bit-exact vs single-device — this is the priced interconnect
+    # term in kv_cache._interconnect_decode.
+    out = sh.constrain(out.reshape(B, 1, -1), rules, (sh.BATCH, None, None))
+    out = out @ p["attn"]["wo"]
     if cfg.post_norms and "post_attn_norm" in p:
         out = layers.apply_norm(out, p["post_attn_norm"], cfg.norm)
     return out, cache
@@ -454,6 +531,7 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     """
     dtype = layers._dtype(cfg.dtype)
     thetas = transformer.layer_thetas(cfg) if cfg.family != "ssm" else None
+    cspecs = kvc.cache_specs(cfg, layout)
 
     def serve_step(params, cache, tokens):
         """One batched decode token for every slot at its own position."""
@@ -463,6 +541,10 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
         phys = kvc.phys_table(
             cache["page_table"], layout.page_size, layout.max_seq
         ) if layout.layout == "paged" and layout.global_layers else None
+        if phys is not None:
+            # the table is replicated; batch-shard the derived gather map so
+            # paged reads split over "data" like slot stacks do
+            phys = sh.constrain(phys, rules, (sh.BATCH, None))
         x = params["embed"][tokens[:, :1]].astype(dtype)
         if cfg.embed_scale:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
@@ -534,6 +616,10 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
         logits = x @ (head if head is not None else params["embed"].T.astype(dtype))
         logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
         cache["pos"] = pos + 1
+        # pin output placements so donated cache buffers are reused in
+        # place across steps instead of drifting to whatever the
+        # partitioner last inferred (no-op without a mesh)
+        cache = kvc.constrain_cache(cache, cspecs, rules)
         return logits, cache
 
     return serve_step
@@ -725,6 +811,10 @@ def _attn_chunk_layer(p, cfg, layout, cache, x, slot, offset, length,
         p["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
         qpos[None], theta, qk_norm=cfg.qk_norm,
     )
+    # B=1 keeps "data" replicated here; heads still shard over "model"
+    q = sh.constrain(q, rules, (sh.BATCH, None, sh.HEADS, None))
+    k = sh.constrain(k, rules, (sh.BATCH, None, sh.KV_HEADS, None))
+    v = sh.constrain(v, rules, (sh.BATCH, None, sh.KV_HEADS, None))
     kind, w = cfg.layer_attn_window(layer_idx)
 
     if layer_idx in layout.local_layers:
@@ -748,6 +838,9 @@ def _attn_chunk_layer(p, cfg, layout, cache, x, slot, offset, length,
                 **_paged_kw(layout),
             )
             view = kvc.paged_entry(cache["global"], gi, phys)
+            # same materialization pin as the decode layer: stop the page
+            # gather fusing into the chunk attend (sharding-stable lowering)
+            view = jax.lax.optimization_barrier(view)
         else:
             cache["global"] = kvc.write_prefill(
                 cache["global"], gi, k, v, slot=slot, offset=offset,
@@ -777,7 +870,11 @@ def _attn_chunk_layer(p, cfg, layout, cache, x, slot, offset, length,
         else:
             out = _cache_attend(q, view, valid, cfg, fmt)
 
-    out = out.astype(x.dtype).reshape(B, C, -1) @ p["attn"]["wo"]
+    # all-gather the head outputs across "model" before the replicated wo
+    # (same bit-exact attend-reduction boundary as the decode layer)
+    out = sh.constrain(out.astype(x.dtype).reshape(B, C, -1), rules,
+                       (sh.BATCH, None, None))
+    out = out @ p["attn"]["wo"]
     if cfg.post_norms and "post_attn_norm" in p:
         out = layers.apply_norm(out, p["post_attn_norm"], cfg.norm)
     return out, cache
@@ -802,6 +899,7 @@ def make_prefill_chunk(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     )
     dtype = layers._dtype(cfg.dtype)
     thetas = transformer.layer_thetas(cfg)
+    cspecs = kvc.cache_specs(cfg, layout)
 
     def prefill_chunk(params, cache, tokens, slot, offset, length):
         """One fixed-shape (1, C) prefill chunk against the live cache."""
@@ -832,6 +930,7 @@ def make_prefill_chunk(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
         logits = x @ (head if head is not None else params["embed"].T.astype(dtype))
         logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
         cache["pos"] = cache["pos"].at[slot].set(offset + length)
+        cache = kvc.constrain_cache(cache, cspecs, rules)
         return logits, cache
 
     return prefill_chunk

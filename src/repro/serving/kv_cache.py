@@ -195,7 +195,9 @@ def _kv_pool(n_layers, n_tok, Hk, Dh, kv_format, dtype):
 def _kv_pool_specs(kv_format):
     # pool token rows are randomly assigned to slots, so neither BATCH nor
     # SEQ sharding applies to the token axis; heads-shard only.  The page
-    # table itself shards over batch.
+    # table is host-owned (the allocator mutates it every admission) and
+    # stays replicated: every device needs every slot's logical→physical
+    # map to gather its own head shard of any row.
     if kv_format == "bf16":
         ax = (sh.LAYERS, None, sh.KV_HEADS, None)
         return {"k": ax, "v": ax}
@@ -249,7 +251,7 @@ def cache_specs(cfg, layout: CacheLayout) -> Tree:
     if layout.global_layers:
         if layout.layout == "paged":
             specs["global"] = _kv_pool_specs(layout.kv_format)
-            specs["page_table"] = (sh.BATCH, None)
+            specs["page_table"] = (None, None)
         else:
             specs["global"] = _kv_stack_specs(layout.kv_format)
     if layout.local_layers:
@@ -330,6 +332,21 @@ def init_cache_arrays(cfg, layout: CacheLayout) -> Tree:
 def init_cache(cfg, layout: CacheLayout) -> Tuple[Tree, Tree]:
     """Returns (cache pytree, logical-axis specs)."""
     return init_cache_arrays(cfg, layout), cache_specs(cfg, layout)
+
+
+def constrain_cache(cache: Tree, specs: Tree, rules) -> Tree:
+    """Pin every cache leaf to its logical-axis sharding inside a jitted
+    step.  A no-op when ``rules`` carries no mesh, so single-device paths
+    compile identical programs.  Applied at the end of serve_step / chunk
+    so scatter-updated pools keep their heads-parallel placement and donated
+    buffers are reused in place instead of resharded."""
+    if getattr(rules, "mesh", None) is None:
+        return cache
+    is_leaf = lambda x: isinstance(x, tuple)
+    flat_specs, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_leaf)
+    flat = treedef.flatten_up_to(cache)
+    out = [sh.constrain(a, rules, ax) for ax, a in zip(flat_specs, flat)]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def cache_bytes(cache: Tree) -> int:
@@ -586,6 +603,48 @@ def _token_row_bytes(cfg, fmt: str) -> float:
     raise ValueError(fmt)
 
 
+def mesh_shard_factors(layout: CacheLayout, cfg, mesh_shape) -> Tuple[int, int]:
+    """``(d_eff, m_eff)``: how many ways a ``(data, model)`` mesh actually
+    splits the serve_step KV reads.  Mirrors :meth:`ShardingRules
+    .spec_for_shape` divisibility fallback — a ``"model"`` axis that does
+    not divide BOTH head counts replicates (q must shard alongside k/v for
+    the attend to stay device-local), and a ``"data"`` axis that does not
+    divide the batch replicates."""
+    d, m = int(mesh_shape[0]), int(mesh_shape[1])
+    Hq, Hk = cfg.num_heads, cfg.num_kv_heads
+    m_eff = m if m >= 1 and Hk and Hq and Hk % m == 0 and Hq % m == 0 else 1
+    d_eff = d if d >= 1 and layout.batch % d == 0 else 1
+    return d_eff, m_eff
+
+
+def _interconnect_decode(layout: CacheLayout, cfg, d_eff: int,
+                         m_eff: int) -> Dict[str, float]:
+    """Collective bytes ONE batched serve_step moves between devices.
+
+    Two collectives are priced — the only ones the bit-exact sharding
+    layout allows (contractions are never split, so there is no psum):
+
+    * ``attend_allgather`` — per attention layer, the f32 per-head attend
+      outputs ``(B, Hq, Dh)`` are all-gathered across ``"model"`` before
+      the (replicated) ``wo`` projection.  Each of the ``m_eff`` shards
+      sends its ``1/m_eff`` slice to the other ``m_eff - 1`` peers.
+    * ``paged_write_bcast`` — paged pools have no batch axis, so they are
+      replicated across ``"data"``; the B decode-token KV rows (computed
+      batch-sharded) must reach every data replica of the pool.
+    """
+    B = layout.batch
+    ng, nl = len(layout.global_layers), len(layout.local_layers)
+    attend = (m_eff - 1) * B * cfg.num_heads * cfg.head_dim * 4.0 * (ng + nl)
+    paged_w = 0.0
+    if layout.layout == "paged" and ng:
+        paged_w = (d_eff - 1) * B * ng * _token_row_bytes(cfg, layout.kv_format)
+    return {
+        "attend_allgather": attend,
+        "paged_write_bcast": paged_w,
+        "total": attend + paged_w,
+    }
+
+
 def bgpp_decode_plan(S: int, cfg) -> Tuple[int, int, Tuple[int, ...]]:
     """Static shapes of one two-phase BGPP decode attend over ``S`` cache
     lanes, per (row, layer): ``(rounds, k_max, survivors)`` with
@@ -603,7 +662,8 @@ def bgpp_decode_plan(S: int, cfg) -> Tuple[int, int, Tuple[int, ...]]:
     return rounds, k_max, survivors
 
 
-def decode_read_bytes(layout: CacheLayout, cfg) -> Dict[str, Any]:
+def decode_read_bytes(layout: CacheLayout, cfg,
+                      mesh_shape: Tuple[int, int] = (1, 1)) -> Dict[str, Any]:
     """KV bytes ONE batched ``serve_step`` gathers, at its static shapes.
 
     All ``layout.batch`` rows and every cached layer are counted (the
@@ -616,6 +676,13 @@ def decode_read_bytes(layout: CacheLayout, cfg) -> Dict[str, Any]:
     the full-row fetch never exceeds the keep ratio.  ``"bf16_equiv"`` is
     what a bf16 cache of the same geometry would read — the reduction
     denominator the benchmarks report.
+
+    With a ``(data, model)`` ``mesh_shape``, two extra sections appear:
+    ``"per_device"`` (the same counters divided by the effective shard
+    count — reads are batch-sharded over ``"data"`` and head-sharded over
+    ``"model"``, so each device gathers ``total / (d_eff * m_eff)`` bytes)
+    and ``"interconnect"`` (see :func:`_interconnect_decode`).  At 1×1
+    per-device equals total and interconnect is zero.
     """
     B, S, W = layout.batch, layout.max_seq, layout.local_window
     ng, nl = len(layout.global_layers), len(layout.local_layers)
@@ -642,10 +709,21 @@ def decode_read_bytes(layout: CacheLayout, cfg) -> Dict[str, Any]:
         out["local"] = B * nl * W * _token_row_bytes(cfg, fmt_l)
     out["total"] = out["global"] + out["local"]
     out["bf16_equiv"] = (B * ng * S + B * nl * W) * _token_row_bytes(cfg, "bf16")
+    d_eff, m_eff = mesh_shard_factors(layout, cfg, mesh_shape)
+    shards = d_eff * m_eff
+    out["per_device"] = {
+        "global": out["global"] / shards,
+        "local": out["local"] / shards,
+        "total": out["total"] / shards,
+        "shards": shards,
+    }
+    out["interconnect"] = _interconnect_decode(layout, cfg, d_eff, m_eff)
     return out
 
 
-def chunk_read_bytes(layout: CacheLayout, cfg) -> Dict[str, float]:
+def chunk_read_bytes(layout: CacheLayout, cfg,
+                     mesh_shape: Tuple[int, int] = (1, 1),
+                     chunk_width: int = 1) -> Dict[str, Any]:
     """KV bytes ONE chunked-prefill step reads from the live cache (one
     slot): global layers attend the full ``(S_max,)`` row at full precision
     — BGPP's progressive prediction is a decode-time saving; prefill
@@ -657,7 +735,23 @@ def chunk_read_bytes(layout: CacheLayout, cfg) -> Dict[str, float]:
     fmt_l = "int8" if layout.kv_format == "bgpp" else layout.kv_format
     g = ng * S * _token_row_bytes(cfg, layout.kv_format)
     loc = nl * W * _token_row_bytes(cfg, fmt_l)
-    return {"global": g, "local": loc, "total": g + loc}
+    out: Dict[str, Any] = {"global": g, "local": loc, "total": g + loc}
+    # chunks run at B=1, so only the "model" head shard splits the reads;
+    # the attend all-gather moves the chunk's Hq*Dh lanes at cache dtype
+    d_eff, m_eff = mesh_shard_factors(layout, cfg, mesh_shape)
+    out["per_device"] = {"total": out["total"] / m_eff, "shards": m_eff}
+    attend = ((m_eff - 1) * chunk_width * cfg.num_heads * cfg.head_dim
+              * _cache_dtype_bytes(cfg) * (ng + nl))
+    # no paged write broadcast here: a B=1 chunk is replicated across
+    # "data" (batch of one cannot shard), so every data replica computes
+    # the chunk redundantly and writes its own pool copy locally
+    del d_eff
+    out["interconnect"] = {
+        "attend_allgather": attend,
+        "paged_write_bcast": 0.0,
+        "total": attend,
+    }
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.distributed import sharding as sh
 from repro.serving import engine, kv_cache as kvc
+from repro.serving import sharded as shd
 from repro.serving.paging import PageAllocator
 from repro.serving.request import Request, Slot, SlotState
 
@@ -85,6 +86,7 @@ class Scheduler:
         prefill_kw: Optional[dict] = None,
         record_logits: bool = False,
         shared_fns: Optional[dict] = None,
+        param_specs=None,
     ):
         assert cfg.family in ("dense", "moe", "vlm"), (
             "the scheduler admits via transformer prefill; ssm/hybrid/enc-dec"
@@ -102,6 +104,20 @@ class Scheduler:
         self.record_logits = record_logits
 
         self.cache = kvc.init_cache_arrays(cfg, layout)
+        # mesh placement (tentpole): KV pools/stacks heads-parallel on
+        # "model" (slot stacks also batch-parallel on "data"), weights under
+        # the bit-exact serving policy, page table + allocator host-side and
+        # replicated.  Everything below is identity without a mesh.
+        self.mesh_shape = shd.mesh_shape(rules)
+        if rules.mesh is not None:
+            self.cache = shd.shard_cache(self.cache, cfg, layout, rules)
+            if param_specs is None:
+                from repro.models import model_zoo
+                try:
+                    param_specs = model_zoo.param_specs(cfg)
+                except Exception:
+                    param_specs = None  # unknown tree: replicate (still exact)
+            self.params = shd.shard_params(params, param_specs, rules)
         self.pager: Optional[PageAllocator] = None
         # a paged layout with no global stack has no pools to manage
         if layout.layout == "paged" and layout.global_layers:
@@ -109,8 +125,12 @@ class Scheduler:
             self._page_bytes = kvc.page_bytes(
                 self.cache["global"], layout.page_size
             )
+            pool_specs = kvc.cache_specs(cfg, layout)["global"]
             self._zero_pages = jax.jit(
-                lambda store, ids: kvc.zero_pages(store, ids, layout.page_size),
+                lambda store, ids: kvc.constrain_cache(
+                    kvc.zero_pages(store, ids, layout.page_size),
+                    pool_specs, rules,
+                ),
                 donate_argnums=(0,),
             )
         self.slots: List[Slot] = [Slot(i) for i in range(layout.batch)]
@@ -146,10 +166,16 @@ class Scheduler:
         # this is the two-phase plan — bit-planes plus at most
         # ceil(keep_ratio·S) full-precision rows per (slot, layer) — the
         # counter stats()["kv_read"] and the serving benchmarks report.
-        self._decode_read = kvc.decode_read_bytes(layout, cfg)
-        self._chunk_read = kvc.chunk_read_bytes(layout, cfg)
+        self._decode_read = kvc.decode_read_bytes(layout, cfg, self.mesh_shape)
+        self._chunk_read = kvc.chunk_read_bytes(layout, cfg, self.mesh_shape)
+        # chunk interconnect scales with the chunk's lane count; price per
+        # valid lane (chunk_width=1) and multiply by tokens consumed
+        self._chunk_ic_per_lane = kvc.chunk_read_bytes(
+            layout, cfg, self.mesh_shape, chunk_width=1
+        )["interconnect"]["total"]
         self.decode_steps = 0
-        self.kv_bytes_read = {"decode": 0.0, "prefill": 0.0}
+        self.kv_bytes_read = {"decode": 0.0, "prefill": 0.0,
+                              "interconnect": 0.0}
         # audit trail for the chunk-budget contract: valid prompt tokens
         # prefilled between this step's admission and its decode
         self.prefill_tokens_per_step: List[int] = []
@@ -163,9 +189,12 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def _sync_pages(self) -> None:
-        """Push the host page table to the device copy if it changed."""
+        """Push the host page table to the (replicated) device copy if it
+        changed — the allocator itself never leaves the host."""
         if self.pager is not None and self.pager.dirty:
-            self.cache["page_table"] = jnp.asarray(self.pager.table)
+            self.cache["page_table"] = shd.replicated(
+                self.pager.table, self.rules
+            )
             self.pager.dirty = False
 
     def _ensure_pages(self, slot: int, lo: int, hi: int) -> None:
@@ -340,6 +369,7 @@ class Scheduler:
                 slot.prefill_pos,
             )
             self.kv_bytes_read["prefill"] += self._chunk_read["total"]
+            self.kv_bytes_read["interconnect"] += self._chunk_ic_per_lane * n
             slot.prefill_pos += n
             spent += n
         if self.pager is not None and not self.layout.local_layers:
@@ -418,6 +448,8 @@ class Scheduler:
         self.step_count += 1
         self.decode_steps += 1
         self.kv_bytes_read["decode"] += self._decode_read["total"]
+        self.kv_bytes_read["interconnect"] += \
+            self._decode_read["interconnect"]["total"]
         self.decoded_tokens += len(live)
         now = time.perf_counter()
         for slot in live:
@@ -474,6 +506,18 @@ class Scheduler:
             "decode_bf16_equiv_bytes_per_step": round(dr["bf16_equiv"]),
             "decode_bytes_reduction_vs_bf16": round(
                 dr["bf16_equiv"] / dr["total"], 3) if dr["total"] else None,
+            # mesh columns: each device's share of the gathers, plus the
+            # explicitly priced collectives (attend all-gather, paged write
+            # broadcast) — zero / equal-to-total at mesh 1x1
+            "mesh": {"data": self.mesh_shape[0], "model": self.mesh_shape[1]},
+            "kv_shards": dr["per_device"]["shards"],
+            "decode_bytes_per_device_per_step": round(
+                dr["per_device"]["total"]),
+            "interconnect_bytes_per_step": round(dr["interconnect"]["total"]),
+            "interconnect_bytes": round(self.kv_bytes_read["interconnect"]),
+            "interconnect": {
+                n: round(v) for n, v in dr["interconnect"].items()
+            },
         }
         if "bgpp" in dr:
             out["kv_read"]["bgpp"] = {

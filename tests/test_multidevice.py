@@ -71,6 +71,213 @@ print("OK")
         assert "OK" in out
 
 
+class TestShardedPagedPools:
+    """Sharded serving cache behaviours (heads-parallel KV pools on a
+    ("data", "model") mesh) — subprocesses with 8 forced host devices."""
+
+    def test_page_table_translation_head_sharded(self):
+        """phys_table + paged_entry on a HEAD-SHARDED pool must read exactly
+        the rows a host-side numpy translation of the page table picks."""
+        out = run_py(
+            """
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.serving import kv_cache as kvc, sharded as shd
+
+cfg = get_config("deepseek-7b", smoke=True)
+lay = kvc.layout_for(cfg, 4, 48, kv_format="bf16", layout="paged", page_size=8)
+rules = shd.rules_for(2, 4)
+cache = shd.shard_cache(kvc.init_cache_arrays(cfg, lay), cfg, lay, rules)
+rng = np.random.default_rng(0)
+pool = {n: jnp.asarray(rng.normal(size=a.shape), a.dtype)
+        for n, a in cache["global"].items()}
+pool = shd.shard_cache({"global": pool, "page_table": cache["page_table"],
+                        "pos": cache["pos"]}, cfg, lay, rules)["global"]
+# a scrambled but valid table: every slot maps a random disjoint page set
+perm = rng.permutation(lay.num_pages)[: 4 * lay.pages_per_slot]
+table = np.asarray(perm, np.int32).reshape(4, lay.pages_per_slot)
+pt = shd.replicated(table, rules)
+phys = kvc.phys_table(pt, lay.page_size, lay.max_seq)
+entry = jax.jit(lambda p, ph: kvc.paged_entry(p, 1, ph))(pool, phys)
+# host reference: logical position t of slot b lives in pool row
+# table[b, t // page] * page + t % page
+rows = (table[:, np.arange(lay.max_seq) // lay.page_size] * lay.page_size
+        + np.arange(lay.max_seq) % lay.page_size)
+np.testing.assert_array_equal(np.asarray(phys), rows)
+for n in ("k", "v"):
+    want = np.asarray(pool[n])[1][rows]          # (B, S, Hk, D)
+    got = np.moveaxis(np.asarray(entry[n]), 1, 2)  # back to (B, S, Hk, D)
+    np.testing.assert_array_equal(got, want, err_msg=n)
+print("OK")
+""",
+            devices=8,
+        )
+        assert "OK" in out
+
+    def test_zero_pages_and_reset_slot_touch_every_shard(self):
+        """zero_pages on a sharded pool and reset_slot on a sharded slot
+        stack must zero the target rows on EVERY leaf of every shard and
+        leave everything else bit-intact."""
+        out = run_py(
+            """
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.serving import kv_cache as kvc, sharded as shd
+
+cfg = get_config("deepseek-7b", smoke=True)
+rules = shd.rules_for(2, 4)
+rng = np.random.default_rng(0)
+
+# paged pool: zero pages {1, 5} through the constrained jitted path
+lay = kvc.layout_for(cfg, 4, 48, kv_format="int8", layout="paged", page_size=8)
+cache = kvc.init_cache_arrays(cfg, lay)
+cache["global"] = {n: jnp.asarray(rng.normal(size=a.shape) + 1.0, jnp.float32)
+                   .astype(a.dtype) if a.dtype != jnp.int8
+                   else jnp.asarray(rng.integers(1, 100, a.shape), jnp.int8)
+                   for n, a in cache["global"].items()}
+cache = shd.shard_cache(cache, cfg, lay, rules)
+specs = kvc.cache_specs(cfg, lay)["global"]
+ids = jnp.asarray(np.asarray([1, 5] + [-1] * 6, np.int32))
+zeroed = jax.jit(lambda s, i: kvc.constrain_cache(
+    kvc.zero_pages(s, i, lay.page_size), specs, rules))(cache["global"], ids)
+tok = np.concatenate([np.arange(8, 16), np.arange(40, 48)])
+for n, a in zeroed.items():
+    host, before = np.asarray(a), np.asarray(cache["global"][n])
+    td = 1  # token dim of every pool leaf after the layer dim
+    if n == "k_planes":
+        td = 2
+    sel = [slice(None)] * host.ndim
+    sel[td] = tok
+    assert not np.any(host[tuple(sel)]), n
+    keep = np.ones(host.shape[td], bool); keep[tok] = False
+    sel[td] = keep
+    np.testing.assert_array_equal(host[tuple(sel)], before[tuple(sel)],
+                                  err_msg=n)
+    assert len(a.sharding.device_set) == 8, (n, a.sharding)
+
+# slot stack: reset_slot(2) zeroes exactly row 2 of every stack leaf
+lay_s = kvc.layout_for(cfg, 4, 48, kv_format="bf16", layout="slot")
+cache_s = kvc.init_cache_arrays(cfg, lay_s)
+cache_s["global"] = {n: jnp.asarray(rng.normal(size=a.shape) + 1.0, a.dtype)
+                     for n, a in cache_s["global"].items()}
+cache_s["pos"] = jnp.asarray([3, 4, 5, 6], jnp.int32)
+cache_s = shd.shard_cache(cache_s, cfg, lay_s, rules)
+reset = jax.jit(lambda c: kvc.constrain_cache(
+    kvc.reset_slot(c, lay_s, 2), kvc.cache_specs(cfg, lay_s), rules))(cache_s)
+for n, a in reset["global"].items():
+    host, before = np.asarray(a), np.asarray(cache_s["global"][n])
+    assert not np.any(host[:, 2]), n
+    mask = np.ones(host.shape[1], bool); mask[2] = False
+    np.testing.assert_array_equal(host[:, mask], before[:, mask], err_msg=n)
+assert np.asarray(reset["pos"]).tolist() == [3, 4, 0, 6]
+print("OK")
+""",
+            devices=8,
+        )
+        assert "OK" in out
+
+    def test_prefix_adoption_refcounts_mesh_invariant(self):
+        """The host allocator never sees the mesh: an identical shared-prefix
+        trace must leave IDENTICAL page tables, refcounts, and allocation
+        counters at mesh 1x1 and 2x4."""
+        out = run_py(
+            """
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import MCBPOptions
+from repro.models import model_zoo
+from repro.serving import kv_cache as kvc, sharded as shd
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler
+
+cfg = get_config("deepseek-7b", smoke=True)
+cfg = dataclasses.replace(cfg, mcbp=MCBPOptions(bgpp_rounds=4, bgpp_keep_ratio=1.0))
+params, _ = model_zoo.init(jax.random.key(0), cfg)
+rng = np.random.default_rng(3)
+prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+def reqs():
+    return [Request(rid=i,
+                    prompt=np.concatenate([prefix, rng.integers(
+                        0, cfg.vocab_size, (3 + i,)).astype(np.int32)]),
+                    max_new_tokens=3 + i, arrival_step=[0, 6, 6, 9][i])
+            for i in range(4)]
+rng_state = rng.bit_generator.state
+
+def run(rules):
+    global rng
+    rng.bit_generator.state = rng_state
+    lay = kvc.layout_for(cfg, 4, 48, kv_format="bf16", layout="paged",
+                         page_size=8)
+    kw = {} if rules is None else {"rules": rules}
+    s = Scheduler(params, cfg, lay, chunk_budget=6, **kw)
+    for r in reqs():
+        s.submit(r)
+    s.run(max_steps=500)
+    assert len(s.finished) == 4
+    s.pager.check()
+    return s
+
+a, b = run(None), run(shd.rules_for(2, 4))
+assert a.prefix_hit_tokens == b.prefix_hit_tokens > 0
+np.testing.assert_array_equal(a.pager.table, b.pager.table)
+np.testing.assert_array_equal(a.pager.refcount, b.pager.refcount)
+assert a.pager.alloc_count == b.pager.alloc_count
+assert a.pager.peak_pages == b.pager.peak_pages
+assert a.pager.pages_in_use == b.pager.pages_in_use == 0
+print("OK", a.prefix_hit_tokens)
+""",
+            devices=8,
+        )
+        assert "OK" in out
+
+    def test_bgpp_phase1_no_cross_model_collectives(self):
+        """Structural: the shard_map-routed two-phase BGPP paged attend
+        (phase-1 plane gathers + top-k + the phase-2 survivor gather)
+        compiles to ZERO collectives on a 2x4 mesh — every step is local to
+        its head shard; the only cross-shard hop of the whole decode layer
+        is the attend-reduction all-gather outside it."""
+        out = run_py(
+            """
+import dataclasses, re
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.configs.base import MCBPOptions
+from repro.serving import engine, kv_cache as kvc, sharded as shd
+
+cfg = get_config("deepseek-7b", smoke=True)
+cfg = dataclasses.replace(cfg, mcbp=MCBPOptions(bgpp_rounds=4, bgpp_keep_ratio=0.5))
+lay = kvc.layout_for(cfg, 4, 48, kv_format="bgpp", layout="paged", page_size=8)
+rules = shd.rules_for(2, 4)
+cache = shd.shard_cache(kvc.init_cache_arrays(cfg, lay), cfg, lay, rules)
+rng = np.random.default_rng(0)
+q = jax.device_put(
+    jnp.asarray(rng.normal(size=(4, cfg.num_heads, cfg.head_dim)), jnp.float32),
+    NamedSharding(rules.mesh, P("data", "model", None)))
+pt = jax.device_put(kvc.identity_page_table(lay), NamedSharding(rules.mesh, P()))
+valid = jax.device_put(jnp.ones((4, lay.max_seq), bool),
+                       NamedSharding(rules.mesh, P("data", None)))
+
+def attend(q, store, pt, valid):
+    phys = kvc.phys_table(pt, lay.page_size, lay.max_seq)
+    return engine._bgpp_paged_decode_attend_sharded(
+        q, store, 0, phys, valid, cfg, lay, rules)
+
+txt = jax.jit(attend).lower(q, cache["global"], pt, valid).compile().as_text()
+hits = sorted(set(re.findall(
+    r"all-reduce|all-gather|all-to-all|collective-permute", txt)))
+assert not hits, hits
+out = jax.jit(attend)(q, cache["global"], pt, valid)
+assert out.shape == (4, cfg.num_heads, cfg.head_dim)
+print("OK")
+""",
+            devices=8,
+        )
+        assert "OK" in out
+
+
 class TestDryRunCell:
     """One real dry-run cell end-to-end (the cheapest arch×shape) — proves
     the 512-device lower+compile machinery from inside the test suite."""

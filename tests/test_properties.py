@@ -7,9 +7,11 @@ import pytest
 from repro.testing.hypcompat import given, settings, st
 
 from repro.analysis.roofline import bgpp_kernel_traffic
+from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core import attention, bstc
 from repro.models import moe
+from repro.serving import kv_cache as kvc
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -139,6 +141,86 @@ class TestBGPPKernelTrafficModel:
             for k in (0.125, 0.25, 0.5, 0.9)
         ]
         assert r[0] > r[1] > r[2] > r[3]
+
+
+class TestKVReadAccountingLaws:
+    """Laws of the mesh columns in the kv-read accounting
+    (kv_cache.decode_read_bytes / chunk_read_bytes): per-device shares
+    recombine to the single-device totals, interconnect bytes vanish
+    exactly at mesh 1x1, and the attend all-gather grows monotonically
+    with the "model" size."""
+
+    # deepseek smoke: 4 q / 4 kv heads — divisible by every model size here
+    CFG = get_config("deepseek-7b", smoke=True)
+
+    def _layout(self, fmt, layout, slots=4):
+        return kvc.layout_for(self.CFG, slots, 48, kv_format=fmt,
+                              layout=layout, page_size=8)
+
+    @given(
+        st.sampled_from(["bf16", "int8", "bgpp"]),
+        st.sampled_from(["slot", "paged"]),
+        st.sampled_from([(1, 1), (2, 1), (1, 2), (1, 4), (2, 4), (4, 2)]),
+    )
+    @settings(max_examples=24, deadline=None)
+    def test_per_device_times_shards_is_total(self, fmt, layout, mesh):
+        lay = self._layout(fmt, layout)
+        out = kvc.decode_read_bytes(lay, self.CFG, mesh)
+        pd = out["per_device"]
+        assert pd["shards"] == mesh[0] * mesh[1]  # all dims divide here
+        np.testing.assert_allclose(pd["total"] * pd["shards"], out["total"])
+        np.testing.assert_allclose(
+            pd["global"] + pd["local"], pd["total"])
+        ck = kvc.chunk_read_bytes(lay, self.CFG, mesh)
+        np.testing.assert_allclose(
+            ck["per_device"]["total"] * ck["per_device"]["shards"],
+            ck["total"])
+
+    @given(st.sampled_from(["bf16", "int8", "bgpp"]),
+           st.sampled_from(["slot", "paged"]))
+    @settings(max_examples=6, deadline=None)
+    def test_interconnect_zero_at_1x1(self, fmt, layout):
+        lay = self._layout(fmt, layout)
+        for reader in (kvc.decode_read_bytes, kvc.chunk_read_bytes):
+            ic = reader(lay, self.CFG, (1, 1))["interconnect"]
+            assert ic["total"] == 0.0, (reader.__name__, ic)
+
+    @given(st.sampled_from(["bf16", "int8", "bgpp"]),
+           st.sampled_from(["slot", "paged"]))
+    @settings(max_examples=6, deadline=None)
+    def test_attend_allgather_monotone_in_model(self, fmt, layout):
+        """The attend reduction's all-gather moves (m_eff - 1)/m_eff of the
+        head outputs — strictly more bytes at every larger dividing model
+        size."""
+        lay = self._layout(fmt, layout)
+        ag = [kvc.decode_read_bytes(lay, self.CFG, (1, m))["interconnect"]
+              ["attend_allgather"] for m in (1, 2, 4)]
+        assert ag[0] == 0.0
+        assert ag[0] < ag[1] < ag[2]
+
+    def test_indivisible_shapes_fall_back_to_replication(self):
+        # phi4 smoke: 6 q / 2 kv heads — neither divides model=4, so the
+        # model factor must collapse to 1 (pool replicated, no interconnect)
+        cfg = get_config("phi4-mini-3.8b", smoke=True)
+        lay = kvc.layout_for(cfg, 3, 48, kv_format="bf16", layout="slot")
+        d_eff, m_eff = kvc.mesh_shard_factors(lay, cfg, (2, 4))
+        assert m_eff == 1
+        assert d_eff == 1  # batch 3 does not divide data=2 either
+        out = kvc.decode_read_bytes(lay, cfg, (2, 4))
+        assert out["per_device"]["shards"] == 1
+        assert out["interconnect"]["total"] == 0.0
+
+    def test_chunk_paged_write_broadcast_is_zero(self):
+        """B=1 prefill chunks are replicated over "data": every replica
+        computes the chunk and writes its own pool copy, so the paged
+        write broadcast term prices nothing (unlike decode, whose batch
+        rows live on distinct data shards)."""
+        lay = self._layout("int8", "paged")
+        for mesh in ((2, 1), (2, 4), (4, 2)):
+            ck = kvc.chunk_read_bytes(lay, self.CFG, mesh)
+            assert ck["interconnect"]["paged_write_bcast"] == 0.0
+            dk = kvc.decode_read_bytes(lay, self.CFG, mesh)
+            assert dk["interconnect"]["paged_write_bcast"] > 0.0
 
 
 class TestDispatchRoundTripLaws:

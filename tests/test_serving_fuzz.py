@@ -39,14 +39,25 @@ from repro.configs import get_config
 from repro.configs.base import MCBPOptions
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
+from repro.serving import sharded as shd
 from repro.serving.request import Request
 from repro.serving.scheduler import Scheduler
 
 jax.config.update("jax_platform_name", "cpu")
 
-ARCHS = {"dense": "phi4-mini-3.8b", "swa": "gemma3-4b"}
+ARCHS = {"dense": "phi4-mini-3.8b", "swa": "gemma3-4b",
+         # deepseek smoke is the sharding-parity arch: the only smoke dense
+         # config whose 4 q/kv heads divide the 4-way "model" axis
+         "mesh": "deepseek-7b"}
 MAX_SEQ = 48
 SLOTS = 2
+# sharded parity runs 4 slots: at mesh (2, 4) the per-device attend then
+# keeps b=2 — XLA CPU's attend lowering is only bit-stable against the
+# single-device program while neither per-device leading dim collapses to
+# (b=1 AND h=1), the mesh analogue of the fixed-batch-shape caveat on
+# _compare_to_alone_runs
+MESH_SLOTS = 4
+MESHES = [(1, 1), (2, 1), (1, 4), (2, 4)]
 PAGE_SIZE = 8
 CHUNK_BUDGET = 6  # buckets (4, 6): lengths 3..20 hit off-bucket/exact/multi
 
@@ -122,11 +133,14 @@ def _dump_failing_trace(meta, reqs):
         raise
 
 
-def _run(cfg, params, layout, reqs, shared=None, admission="chunked"):
+def _run(cfg, params, layout, reqs, shared=None, admission="chunked",
+         rules=None):
+    kw = {} if rules is None else {"rules": rules}
     sched = Scheduler(
         params, cfg, layout, admission=admission, chunk_budget=CHUNK_BUDGET,
         record_logits=True, shared_fns=shared,
         prefill_kw=dict(block_q=16, block_k=32) if admission == "eager" else None,
+        **kw,
     )
     for r in reqs:
         sched.submit(r)
@@ -297,6 +311,121 @@ class TestFuzzOracle:
     @pytest.mark.slow
     def test_dense_bf16_heavy(self, rng_seed, layout):
         _fuzz_oracle("dense", "bf16", rng_seed + 1, 7, layout=layout)
+
+
+# --------------------------------------------------------------------------
+# sharding parity: identical traces at mesh 1x1 vs (data, model) shards
+# --------------------------------------------------------------------------
+
+_MESH_BASE = {}
+
+
+def _mesh_base_run(kv_format, layout, seed):
+    """The single-device joint trace every mesh compares against, cached per
+    (format, layout, seed) — compiled fns are NEVER shared across rules."""
+    key = (kv_format, layout, seed)
+    if key not in _MESH_BASE:
+        cfg, params = _model("mesh")
+        rng = np.random.default_rng(seed)
+        reqs = _random_requests(rng, cfg, 6,
+                                teacher_forced=kv_format != "bf16")
+        _, joint = _run(cfg, params,
+                        _layout_for(cfg, kv_format, layout, slots=MESH_SLOTS),
+                        [_clone(r, r.arrival_step) for r in reqs])
+        _MESH_BASE[key] = (reqs, joint)
+    return _MESH_BASE[key]
+
+
+def _sharded_parity_oracle(kv_format, layout, mesh, seed,
+                           check_alone_runs=False):
+    """Run the SAME request trace through a (data, model)-meshed scheduler
+    and through a single-device one, and demand the joint traces match —
+    bit-exactly for bf16 caches, within 1e-5 for int8/bgpp (teacher-forced,
+    as in the base oracle).  Also audits the mesh columns of the kv_read
+    counter: interconnect bytes are zero exactly at 1x1, positive whenever
+    the heads actually shard, and the per-device column recombines to the
+    single-device total."""
+    d, m = mesh
+    if jax.device_count() < d * m:
+        pytest.skip(f"mesh {d}x{m} needs {d * m} host devices; set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
+    cfg, params = _model("mesh")
+    exact = kv_format == "bf16"
+    reqs, want = _mesh_base_run(kv_format, layout, seed)
+    meta = {"oracle": "sharded-parity", "arch": "mesh",
+            "kv_format": kv_format, "layout": layout,
+            "mesh": f"{d}x{m}", "seed": seed}
+    with _dump_failing_trace(meta, reqs):
+        rules = shd.rules_for(d, m)
+        sched, got = _run(
+            cfg, params, _layout_for(cfg, kv_format, layout,
+                                     slots=MESH_SLOTS),
+            [_clone(r, r.arrival_step) for r in reqs], rules=rules,
+        )
+        for r in reqs:
+            g, w = got[r.rid], want[r.rid]
+            assert len(g.logit_rows) == len(w.logit_rows)
+            for t, (a, b) in enumerate(zip(g.logit_rows, w.logit_rows)):
+                if exact:
+                    assert np.array_equal(a, b), (
+                        f"{kv_format}/{layout}@{d}x{m} rid {r.rid} token "
+                        f"{t}: sharded logits not bit-identical to the "
+                        f"1x1 run (max |d| {np.max(np.abs(a - b))})"
+                    )
+                else:
+                    err = float(np.max(np.abs(a - b)))
+                    assert err <= 1e-5, (
+                        f"{kv_format}/{layout}@{d}x{m} rid {r.rid} "
+                        f"token {t}: |d|={err}"
+                    )
+            if exact:
+                assert g.generated == w.generated, (
+                    f"{kv_format}/{layout}@{d}x{m} rid {r.rid}: greedy "
+                    f"tokens diverge under sharding"
+                )
+        kv = sched.stats()["kv_read"]
+        assert kv["mesh"] == {"data": d, "model": m}
+        per_dev = kv["decode_bytes_per_device_per_step"] * kv["kv_shards"]
+        assert abs(per_dev - kv["decode_bytes_per_step"]) <= kv["kv_shards"]
+        if (d, m) == (1, 1):
+            assert kv["interconnect_bytes_per_step"] == 0
+            assert kv["interconnect_bytes"] == 0
+        elif m > 1:  # heads actually shard: the attend all-gather is priced
+            assert kv["interconnect_bytes_per_step"] > 0
+            assert kv["interconnect_bytes"] > 0
+        if check_alone_runs:
+            # the satellite contract: the SHARDED joint trace itself is
+            # also pinned to single-device slot-layout alone runs
+            _compare_to_alone_runs(cfg, params, reqs, got, "mesh",
+                                   kv_format, layout, slots=MESH_SLOTS)
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+class TestShardedParity:
+    """Mesh (1,1)/(2,1)/(1,4)/(2,4) x layout x kv-format parity (tentpole
+    acceptance).  Above-1x1 meshes skip unless the host exposes enough
+    devices (the sharded-serving CI job forces 8)."""
+
+    @pytest.mark.parametrize("mesh", MESHES,
+                             ids=[f"{d}x{m}" for d, m in MESHES])
+    def test_sharded_bf16(self, layout, mesh):
+        _sharded_parity_oracle("bf16", layout, mesh, 0,
+                               check_alone_runs=mesh == (2, 4))
+
+    def test_sharded_int8_2x4(self, layout):
+        _sharded_parity_oracle("int8", layout, (2, 4), 0)
+
+    def test_sharded_bgpp_2x4(self, layout):
+        _sharded_parity_oracle("bgpp", layout, (2, 4), 0)
+
+    @pytest.mark.slow
+    def test_sharded_int8_1x4(self, layout):
+        _sharded_parity_oracle("int8", layout, (1, 4), 0)
+
+    @pytest.mark.slow
+    def test_sharded_bgpp_2x1(self, layout):
+        _sharded_parity_oracle("bgpp", layout, (2, 1), 0)
 
 
 class TestSharedPrefixReuse:

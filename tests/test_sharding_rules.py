@@ -1,5 +1,7 @@
 """ShardingRules: logical-axis mapping, divisibility safety, FSDP/seq modes."""
 
+import warnings
+
 import numpy as np
 import pytest
 
@@ -83,6 +85,46 @@ class TestDivisibilitySafety:
         )
         # batch 16 NOT divisible by 32
         assert r.spec_for_shape(mesh, (sh.BATCH, None), (16, 8)) == P(None, None)
+
+
+class TestFallbackWarning:
+    """Silent-replication fallback must not stay silent: a real size
+    mismatch warns ShardingFallbackWarning; legitimate no-op cases
+    (dim 1, duplicate mesh axis) stay quiet."""
+
+    def test_warns_on_nondividing_dim(self):
+        mesh = fake_mesh((16, 16), ("data", "model"))
+        r = sh.ShardingRules()
+        with pytest.warns(sh.ShardingFallbackWarning,
+                          match="kv_heads.*dim 6.*not.*divisible"):
+            spec = r.spec_for_shape(mesh, (sh.KV_HEADS, None), (6, 64))
+        assert spec == P(None, None)  # behaviour unchanged: replicated
+
+    def test_warns_on_nondividing_tuple_axis(self):
+        mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+        r = sh.ShardingRules(batch_axes=("pod", "data"))
+        with pytest.warns(sh.ShardingFallbackWarning, match="size 32"):
+            r.spec_for_shape(mesh, (sh.BATCH, None), (16, 8))
+
+    def test_silent_on_dim_one(self):
+        # dim 1 = "nothing to shard" (B=1 chunks, squeezed axes) — not a
+        # misconfiguration, must not spam
+        mesh = fake_mesh((16, 16), ("data", "model"))
+        r = sh.ShardingRules()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", sh.ShardingFallbackWarning)
+            spec = r.spec_for_shape(mesh, (sh.KV_HEADS, sh.BATCH), (1, 32))
+        assert spec == P(None, "data")
+
+    def test_silent_on_duplicate_axis(self):
+        # a later logical dim losing "model" to an earlier one is the
+        # documented at-most-once rule, not a fallback
+        mesh = fake_mesh((16, 16), ("data", "model"))
+        r = sh.ShardingRules()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", sh.ShardingFallbackWarning)
+            spec = r.spec_for_shape(mesh, (sh.HEADS, sh.KV_HEADS), (32, 32))
+        assert spec == P("model", None)
 
 
 class TestRulesForMesh:
