@@ -11,6 +11,9 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_fn
 from repro.kernels.brcr_gemm import brcr_gemm, prepare_brcr_operands
 from repro.kernels.bstc_matmul import bstc_matmul, prepare_bstc_matmul_operands
+from repro.kernels.bgpp_paged_attend import bgpp_paged_attend
+from repro.kernels.paged_flash_decode import paged_flash_decode
+from repro.serving import kv_cache as kvc
 from repro.utils.synthetic import synthetic_llm_weight_int8
 
 
@@ -40,3 +43,46 @@ def run():
         f"hbm_bytes={ops_bstc.hbm_bytes};dense_bytes={ops_bstc.dense_bytes};"
         f"CR={ops_bstc.compression_ratio:.3f}",
     )
+
+    # ISSUE-7 paged-attention families: interpret-mode kernel vs the jnp
+    # oracle on identical operands (the structural derived numbers — bytes
+    # per head, keep budget — are what transfer to TPU, not CPU emulation
+    # wall clock).
+    B, Hk, g, Dh, S, page = 2, 2, 3, 32, 64, 8
+    k = jnp.asarray(rng.normal(size=(B * S, Hk, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B * S, Hk, Dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, Hk, g, Dh)), jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(B * S // page).reshape(B, S // page).astype(np.int32)
+    )
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    k_q, ks = kvc.quantize_kv(k)
+    v_q, vs = kvc.quantize_kv(v)
+    for mode, tag in (("interpret", "interp"), ("ref", "ref")):
+        us = time_fn(
+            lambda m=mode: paged_flash_decode(
+                q, k_q, v_q, table, pos, page_size=page,
+                k_scale=ks, v_scale=vs, mode=m,
+            ),
+            iters=3, warmup=1,
+        )
+        emit(f"kernel_paged_flash_decode_int8_{tag}", us,
+             f"B{B}xHk{Hk}xg{g}xD{Dh};S={S};page={page}")
+
+    planes, sign = kvc.k_to_bitplanes(k_q)
+    phys = jnp.asarray(
+        rng.permutation(B * S).reshape(B, S).astype(np.int32)
+    )
+    rounds, keep = 4, 0.25
+    k_max = max(1, int(np.ceil(keep * S)))
+    survivors = (S,) + tuple(max(k_max, S >> r) for r in range(1, rounds))
+    for mode, tag in (("interpret", "interp"), ("ref", "ref")):
+        us = time_fn(
+            lambda m=mode: bgpp_paged_attend(
+                q, planes, sign, ks, v_q, vs, phys, pos,
+                rounds=rounds, k_max=k_max, survivors=survivors, mode=m,
+            ),
+            iters=3, warmup=1,
+        )
+        emit(f"kernel_bgpp_paged_attend_{tag}", us,
+             f"B{B}xHk{Hk}xg{g}xD{Dh};S={S};rounds={rounds};k_max={k_max}")

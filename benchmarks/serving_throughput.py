@@ -7,6 +7,7 @@ plus the paged KV cache under a shared-system-prompt trace.
         [--kv-formats bf16,int8,bgpp] [--chunk-budget 8] [--quick] \\
         [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] [--mesh 2,4] \\
+        [--decode-kernel auto|jnp|interpret|kernel] \\
         [--baseline BENCH_serving.json] [--out BENCH_serving.json]
 
 All runtimes drive the SAME jitted serve_step and the same seeded request
@@ -82,10 +83,11 @@ except ImportError:  # python benchmarks/serving_throughput.py
     from common import emit, emit_header
 
 from repro.configs import (  # noqa: E402
-    ARCH_REGISTRY, apply_bgpp_overrides, get_config,
+    ARCH_REGISTRY, apply_bgpp_overrides, apply_decode_kernel_override,
+    get_config,
 )
 from repro.models import model_zoo  # noqa: E402
-from repro.serving import engine, kv_cache as kvc  # noqa: E402
+from repro.serving import engine, kernel_decode, kv_cache as kvc  # noqa: E402
 from repro.serving import sharded as shd  # noqa: E402
 from repro.serving.request import poisson_trace  # noqa: E402
 from repro.serving.scheduler import Scheduler  # noqa: E402
@@ -237,6 +239,12 @@ def main():
     ap.add_argument("--bgpp-keep-ratio", type=float, default=0.25,
                     help="fraction of keys the bgpp decode fetches at "
                          "full precision")
+    ap.add_argument("--decode-kernel", default=None,
+                    choices=sorted(kernel_decode.MODES),
+                    help="global-layer decode attend routing (auto = "
+                         "compiled Pallas kernel on TPU, legacy jnp "
+                         "elsewhere); every serving row carries the "
+                         "resolved mode as a decode_kernel column")
     ap.add_argument("--quick", action="store_true",
                     help="one format, chunked+eager only — the CI gate")
     ap.add_argument("--baseline", default=None,
@@ -262,6 +270,8 @@ def main():
         get_config(args.arch, smoke=True),
         rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
     )
+    cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
+    dk_mode = kernel_decode.resolve(cfg)
     params, _ = model_zoo.init(jax.random.key(0), cfg)
     formats = args.kv_formats.split(",")
     if args.quick:
@@ -274,7 +284,8 @@ def main():
     ok = True
     for fmt in formats:
         layout = kvc.layout_for(cfg, args.slots, args.max_seq, kv_format=fmt)
-        entry = {"kv_read_mesh": mesh_kv_entries(layout, cfg)}
+        entry = {"decode_kernel": dk_mode,
+                 "kv_read_mesh": mesh_kv_entries(layout, cfg)}
         shared = None
         runtimes = ["chunked", "eager"] + ([] if args.quick else ["lockstep"])
         for runtime in runtimes:
@@ -308,7 +319,7 @@ def main():
                               f";ic_step={r['interconnect_bytes_per_step']}")
             emit(f"serving_{fmt}_{runtime}", us,
                  f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
-                 + extra)
+                 f";decode_kernel={dk_mode}" + extra)
         delta = entry["chunked"]["mean_occupancy"] \
             - entry["eager"]["mean_occupancy"]
         entry["chunked_vs_eager_occupancy"] = round(delta, 4)
@@ -348,6 +359,41 @@ def main():
                       f"counted {got_ic} B total")
                 ok = False
 
+        if not args.quick and dk_mode == "jnp" and rules is None:
+            # jnp-vs-kernel comparison row: the SAME chunked trace with the
+            # decode attend routed through the Pallas kernel family in
+            # interpret mode.  On CPU CI this is kernel EMULATION — the
+            # wall clock is flagged and never gated; the row exists so the
+            # baseline records both paths side by side (on TPU the compiled
+            # row replaces it).
+            cfg_k = apply_decode_kernel_override(cfg, "interpret")
+            rng = np.random.default_rng(args.seed)
+            kreqs = poisson_trace(rng, args.requests, cfg.vocab_size,
+                                  args.max_new, arrival_rate=3.0,
+                                  min_new=max(2, args.max_new // 3),
+                                  max_prompt=min(23, args.max_seq - 2))
+            entry["chunked_interpret"], _ = run_scheduler(
+                params, cfg_k, layout, kreqs, "chunked", args.chunk_budget,
+            )
+            entry["chunked_interpret"]["note"] = (
+                "decode_kernel=interpret on CPU: Pallas interpret-mode "
+                "emulation wall clock, NOT TPU kernel time — parity/bytes "
+                "columns transfer, us_per_call does not"
+            )
+            rk = entry["chunked_interpret"]
+            us = 1e6 / rk["tokens_per_s"] if rk["tokens_per_s"] else 0.0
+            emit(f"serving_{fmt}_chunked_interpret", us,
+                 f"occ={rk['mean_occupancy']:.3f};tok_s={rk['tokens_per_s']}"
+                 f";decode_kernel=interpret;flag=cpu_interpret_emulation"
+                 f";kv_step={rk['decode_kv_bytes_per_step']}")
+            # routing must not change WHAT the step gathers: the kv-read
+            # counter prices the plan, not the executor
+            if rk["decode_kv_bytes_per_step"]                     != entry["chunked"]["decode_kv_bytes_per_step"]:
+                print(f"# REGRESSION {fmt}: kernel-routed decode reads "
+                      f"{rk['decode_kv_bytes_per_step']} B/step vs jnp "
+                      f"{entry['chunked']['decode_kv_bytes_per_step']}")
+                ok = False
+
         if not args.quick:
             # paged layout under a shared-system-prompt trace: later
             # requests must adopt the resident prompt pages (hit rate > 0)
@@ -372,6 +418,7 @@ def main():
             us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
             emit(f"serving_{fmt}_paged", us,
                  f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
+                 f";decode_kernel={dk_mode}"
                  f";prefix_hit_rate={r['prefix_hit_rate']}"
                  f";resident_kv_peak={r['resident_kv_bytes_peak']}"
                  f";slot_resident={r['slot_resident_kv_bytes']}")

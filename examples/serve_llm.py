@@ -24,7 +24,8 @@ import numpy as np
 
 import jax
 
-from repro.configs import ARCH_REGISTRY, apply_bgpp_overrides, get_config
+from repro.configs import (ARCH_REGISTRY, apply_bgpp_overrides,
+                           apply_decode_kernel_override, get_config)
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
 from repro.serving import sharded as shd
@@ -49,6 +50,10 @@ def main():
     ap.add_argument("--bgpp-keep-ratio", type=float, default=None,
                     help="fraction of keys the bgpp decode keeps at full "
                          "precision (default: config's)")
+    ap.add_argument("--decode-kernel", default=None,
+                    choices=["auto", "jnp", "interpret", "kernel"],
+                    help="global-layer decode attend: jnp (legacy) or the "
+                         "Pallas paged-attention kernels (default: config's)")
     ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
@@ -65,6 +70,7 @@ def main():
         get_config(args.arch, smoke=True),
         rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
     )
+    cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("this driver serves transformer families; "
                          "see tests/test_serving.py for ssm/hybrid/enc-dec")

@@ -170,10 +170,17 @@ def bgpp_kernel_traffic(
 
       sign plane (once)      S · D/8
       round r plane          k_r · D/8,   k_0 = S, k_r = max(k_max, S/2^r)
-      formal compute         k_max · (nbits·D/8 + D + D + scales)
-                             (reconstruct K + read V int8 + write ≈ D)
+      formal compute         k_max · (nbits·D/8 + D/8 + D + 8)
+                             (re-fetch the survivor's packed planes + sign
+                             to reconstruct K, read its int8 V row, two
+                             f32 scales — the exact per-head row the
+                             serving counter ``kv_cache._token_row_bytes``
+                             prices, so measured/modeled gates at ~1.0)
 
-    vs the dense int8 baseline 2·S·D (K+V).  Returns bytes + the ratio.
+    vs the dense int8 baseline 2·S·D (K+V).  The f32 output write is NOT
+    part of ``bgpp_kernel_bytes`` (the cache counter never charges it);
+    it is reported separately as ``output_write_bytes``.  Returns bytes +
+    the ratio.
     """
     # ceil, matching THE serving plan (repro.serving.kv_cache
     # .bgpp_decode_plan) so measured-vs-modeled comparisons never carry a
@@ -184,13 +191,14 @@ def bgpp_kernel_traffic(
     for r in range(rounds):
         bytes_ += k_r * D / 8.0
         k_r = max(k_max, S >> (r + 1))
-    bytes_ += k_max * (nbits * D / 8.0 + D + D + 8)
+    bytes_ += k_max * (nbits * D / 8.0 + D / 8.0 + D + 8)
     dense = 2.0 * S * D
     return {
         "bgpp_kernel_bytes": bytes_,
         "dense_int8_bytes": dense,
         "reduction": dense / bytes_,
         "k_max": k_max,
+        "output_write_bytes": D * 4.0,
     }
 
 

@@ -3,6 +3,7 @@ from repro.configs.base import (  # noqa: F401
     MCBPOptions,
     ModelConfig,
     apply_bgpp_overrides,
+    apply_decode_kernel_override,
     get_config,
 )
 from repro.configs import shapes  # noqa: F401

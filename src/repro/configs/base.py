@@ -34,6 +34,21 @@ class MCBPOptions:
     bgpp_keep_ratio: float = 0.25  # k_max = ceil(ratio * S) for static gather
     # weight numerics for serving: "bf16" | "int8" | "bstc"
     weight_format: str = "bf16"
+    # global-layer decode attend routing: "auto" | "jnp" | "interpret" |
+    # "kernel" — auto = compiled Pallas kernel on TPU backends, legacy jnp
+    # attend elsewhere (see repro.serving.kernel_decode)
+    decode_kernel: str = "auto"
+
+
+def apply_decode_kernel_override(cfg, mode: Optional[str] = None):
+    """Return ``cfg`` with its ``decode_kernel`` knob replaced (``None``
+    keeps the config's value) — the one code path behind every CLI's
+    ``--decode-kernel`` flag."""
+    if mode is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, mcbp=dataclasses.replace(cfg.mcbp, decode_kernel=str(mode))
+    )
 
 
 def apply_bgpp_overrides(cfg, rounds: Optional[int] = None,

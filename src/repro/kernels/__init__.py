@@ -21,6 +21,13 @@ Kernels:
                     (paper §4.5 adder trees)
   flash_attention — tiled online-softmax attention (causal / sliding /
                     chunked masks) for the 32k/500k shapes
+  paged_flash_decode — page-table-aware single-token flash decode on the
+                    token-major paged KV pool (bf16 + int8 A2/A3); the
+                    BlockSpec index map gathers physical pages directly,
+                    so no contiguous per-slot KV view is ever built
+  bgpp_paged_attend — fused two-phase BGPP paged decode: progressive
+                    plane scan + top-k prediction + compacted survivor
+                    gather + exact int8 attend in one launch (paper §3.3)
 """
 
 from repro.kernels.dispatch import (  # noqa: F401

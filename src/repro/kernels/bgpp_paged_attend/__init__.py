@@ -1,0 +1,5 @@
+"""Fused two-phase BGPP paged decode: plane scan + top-k + int8 attend."""
+
+from repro.kernels.bgpp_paged_attend.ops import bgpp_paged_attend
+
+__all__ = ["bgpp_paged_attend"]

@@ -1,0 +1,204 @@
+"""Pallas body for the fused two-phase BGPP paged decode.
+
+One launch per decode step, grid ``(B, Hk)``: each (slot, kv-head) cell
+runs the WHOLE two-phase pipeline device-locally —
+
+  1. quantize + MSB-truncate its g query rows (engine
+     ``_bgpp_quant_query``);
+  2. round 0: gather the packed sign + MSB magnitude plane of every
+     logical position through the scalar-prefetched ``phys`` map, unpack,
+     and score ``qf @ ((1-2*sign) * plane)^T * 2^(NBITS-1)``;
+  3. progressive rounds: iterative-argmax top-k keeps ``survivors[r]``
+     candidates (bitwise the same selection as ``lax.top_k`` — first-
+     occurrence argmax reproduces its lower-index tie-break, and the
+     plane scores are integer-exact f32), then gathers ONLY the
+     survivors' next plane and accumulates ``* 2^(NBITS-1-r)``;
+  4. the final ``k_max`` survivors' full rows (all NBITS planes + sign +
+     scales + int8 V) are gathered compacted, K is reconstructed from its
+     bit planes, and the engine's exact int8 A2/A3 attend runs on the
+     ``(g, k_max)`` score row.
+
+Nothing wider than ``k_max`` full rows is ever materialized, matching the
+kv-read counter's claim at the kernel level.  The pool blocks arrive
+whole-axis per head (``(n_tok, 1, ...)``); the in-kernel row gathers are
+dynamic (``pool[rows]``), which interpret mode executes exactly and a
+Mosaic lowering would turn into per-row DMA — compiled-mode throughput is
+untuned; interpret parity on CPU CI is the correctness bar this repo pins.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+NEG_INF = -1e30  # matches repro.core.attention.NEG_INF
+
+
+def _unpack_bits_i32(packed: jax.Array) -> jax.Array:
+    """(..., D/8) uint8 -> (..., D) int32 bits (little-endian in the byte —
+    the bgpp_score kernel's idiom, matching ``bitslice.unpack_bits``)."""
+    x = packed.astype(jnp.int32)
+    shape = x.shape[:-1] + (x.shape[-1], 8)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+    bits = (x[..., None] >> shifts) & 1
+    return bits.reshape(x.shape[:-1] + (x.shape[-1] * 8,))
+
+
+def _topk_iter(score: jax.Array, k: int) -> jax.Array:
+    """First-occurrence iterative argmax — ``lax.top_k``'s descending order
+    and lowest-index tie-break.  Taken lanes drop to -inf, strictly below
+    the NEG_INF invalid-lane sentinel, so they can't be re-selected."""
+
+    def body(i, st):
+        s, out = st
+        j = jnp.argmax(s).astype(jnp.int32)
+        return s.at[j].set(-jnp.inf), out.at[i].set(j)
+
+    _, out = jax.lax.fori_loop(
+        0, k, body, (score, jnp.zeros((k,), jnp.int32))
+    )
+    return out
+
+
+def _plane_dot(qf, plane_bits, sign_bits):
+    """qf (g, D) f32 x signed plane rows (n, D) -> (g, n) f32 (engine's
+    ``plane_scores`` einsum per cell)."""
+    signed = jnp.where(sign_bits.astype(bool), -1.0, 1.0) * plane_bits
+    return jax.lax.dot_general(
+        qf, signed, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _body(phys_ref, pos_ref, q_ref, planes_ref, sign_ref, kscale_ref,
+          v_ref, vscale_ref, out_ref, *, rounds: int, k_max: int,
+          survivors: Tuple[int, ...], nbits: int, query_bits: int,
+          scale: float):
+    b = pl.program_id(0)
+    rows_all = phys_ref[b]  # (S,) pool rows of this slot's logical lane s
+    posb = pos_ref[b]
+    S = rows_all.shape[0]
+    planes = planes_ref[:, :, 0, :]  # (NBITS, n_tok, D/8)
+    signs = sign_ref[:, 0, :]  # (n_tok, D/8)
+
+    # ---- phase 1, step 0: quantize + MSB-truncate the g query rows ------
+    qb = q_ref[0, 0].astype(jnp.float32)  # (g, D)
+    dq = jnp.maximum(jnp.max(jnp.abs(qb), axis=-1, keepdims=True), 1e-8) / 127.0
+    q_int = jnp.clip(jnp.round(qb / dq), -127, 127).astype(jnp.int32)
+    shift = max(nbits - query_bits, 0)  # core.bgpp._truncate_query
+    qf = (jnp.sign(q_int) * ((jnp.abs(q_int) >> shift) << shift)).astype(
+        jnp.float32
+    )
+
+    # ---- round 0: sign + MSB plane of EVERY logical lane ----------------
+    sign_s = _unpack_bits_i32(signs[rows_all])  # (S, D)
+    plane0 = _unpack_bits_i32(planes[nbits - 1][rows_all]).astype(jnp.float32)
+    partial = _plane_dot(qf, plane0, sign_s) * float(2 ** (nbits - 1))  # (g,S)
+    valid = jnp.arange(S, dtype=jnp.int32) <= posb
+    score = jnp.where(valid, jnp.max(partial, axis=0), NEG_INF)
+
+    # ---- progressive rounds over the shrinking candidate set ------------
+    cur_idx = None
+    for r in range(1, rounds):
+        li = _topk_iter(score, survivors[r])
+        cur_idx = li if cur_idx is None else cur_idx[li]
+        partial = partial[:, li]
+        p_r = nbits - 1 - r
+        rows_r = rows_all[cur_idx]
+        plane_r = _unpack_bits_i32(planes[p_r][rows_r]).astype(jnp.float32)
+        sign_r = _unpack_bits_i32(signs[rows_r])
+        partial = partial + _plane_dot(qf, plane_r, sign_r) * float(2**p_r)
+        score = jnp.where(valid[cur_idx], jnp.max(partial, axis=0), NEG_INF)
+
+    li = _topk_iter(score, k_max)
+    idx = li if cur_idx is None else cur_idx[li]  # (k_max,) logical lanes
+    idx_valid = valid[idx]
+
+    # ---- phase 2: compacted full-row gather + exact int8 attend ---------
+    rows_k = rows_all[idx]  # (k_max,) pool rows
+    plane_bits = _unpack_bits_i32(planes[:, rows_k])  # (NBITS, k, D)
+    mag = jnp.zeros_like(plane_bits[0])  # (k, D) int32
+    for p in range(nbits):  # static unroll — no captured weight constant
+        mag = mag + plane_bits[p] * (2**p)
+    sign_k = _unpack_bits_i32(signs[rows_k])
+    k_q = jnp.where(sign_k != 0, -mag, mag).astype(jnp.int8)
+    ks = kscale_ref[:, 0][rows_k]  # (k,) f32
+    vs = vscale_ref[:, 0][rows_k]
+    v_k = v_ref[:, 0, :][rows_k]  # (k, D) int8
+
+    q_scale = jnp.maximum(jnp.max(jnp.abs(qb), axis=-1, keepdims=True), 1e-8) / 127.0
+    q_q = jnp.clip(jnp.round(qb / q_scale), -127, 127).astype(jnp.int8)
+    logits_i = jax.lax.dot_general(
+        q_q, k_q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )  # (g, k)
+    logits = logits_i.astype(jnp.float32) * q_scale * ks[None, :] * scale
+    logits = jnp.where(idx_valid[None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    w = probs * vs[None, :]
+    w_scale = jnp.maximum(jnp.max(w, axis=-1, keepdims=True), 1e-20) / 127.0
+    w_q = jnp.clip(jnp.round(w / w_scale), 0, 127).astype(jnp.int8)
+    out = jax.lax.dot_general(
+        w_q, v_k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[0, 0] = out * w_scale
+
+
+def bgpp_paged_attend_pallas(
+    q: jax.Array,  # (B, Hk, g, D) f32 RAW grouped decode query
+    k_planes: jax.Array,  # (NBITS, n_tok, Hk, D/8) uint8
+    k_sign: jax.Array,  # (n_tok, Hk, D/8) uint8
+    k_scale: jax.Array,  # (n_tok, Hk) f32
+    v: jax.Array,  # (n_tok, Hk, D) int8
+    v_scale: jax.Array,  # (n_tok, Hk) f32
+    phys: jax.Array,  # (B, S) int32
+    pos: jax.Array,  # (B,) int32
+    *,
+    rounds: int,
+    k_max: int,
+    survivors: Tuple[int, ...],
+    query_bits: int = 4,
+    interpret: bool = False,
+) -> jax.Array:
+    """Launch the fused BGPP decode kernel -> f32 ``(B, Hk, g, D)``."""
+    B, Hk, g, D = q.shape
+    nbits, n_tok, _, Dp = k_planes.shape
+    cellmap = lambda b, h, phys_, pos_: (b, h, 0, 0)
+    poolmap3 = lambda b, h, phys_, pos_: (0, h, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), cellmap),
+            pl.BlockSpec(
+                (nbits, n_tok, 1, Dp), lambda b, h, phys_, pos_: (0, 0, h, 0)
+            ),
+            pl.BlockSpec((n_tok, 1, Dp), poolmap3),
+            pl.BlockSpec((n_tok, 1), lambda b, h, phys_, pos_: (0, h)),
+            pl.BlockSpec((n_tok, 1, D), poolmap3),
+            pl.BlockSpec((n_tok, 1), lambda b, h, phys_, pos_: (0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), cellmap),
+    )
+    body = functools.partial(
+        _body, rounds=rounds, k_max=k_max, survivors=tuple(survivors),
+        nbits=nbits, query_bits=query_bits, scale=D**-0.5,
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, g, D), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(phys.astype(jnp.int32), pos.astype(jnp.int32), q.astype(jnp.float32),
+      k_planes, k_sign, k_scale, v, v_scale)

@@ -38,7 +38,8 @@ import numpy as np
 
 import jax
 
-from repro.configs import ARCH_REGISTRY, apply_bgpp_overrides, get_config
+from repro.configs import (ARCH_REGISTRY, apply_bgpp_overrides,
+                           apply_decode_kernel_override, get_config)
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_debug_mesh
 from repro.models import model_zoo
@@ -65,6 +66,12 @@ def main():
     ap.add_argument("--bgpp-rounds", type=int, default=None,
                     help="progressive-prediction rounds for --kv-format "
                          "bgpp (default: the config's, usually 4)")
+    ap.add_argument("--decode-kernel", default=None,
+                    choices=["auto", "jnp", "interpret", "kernel"],
+                    help="global-layer decode attend path: jnp (legacy), "
+                         "interpret/kernel (Pallas paged-attention "
+                         "families), auto = kernel on TPU (default: "
+                         "config's; env REPRO_DECODE_KERNEL overrides)")
     ap.add_argument("--bgpp-keep-ratio", type=float, default=None,
                     help="fraction of keys fetched at full precision by "
                          "the bgpp top-k decode (default: the config's, "
@@ -101,6 +108,7 @@ def main():
         get_config(args.arch, smoke=True),
         rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
     )
+    cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("continuous batching driver covers transformer "
                          "families; ssm/hybrid/enc-dec decode in tests/")
@@ -186,6 +194,7 @@ def main():
             "mesh": [args.data, args.model],
             "bgpp_rounds": cfg.mcbp.bgpp_rounds,
             "bgpp_keep_ratio": cfg.mcbp.bgpp_keep_ratio,
+            "decode_kernel": cfg.mcbp.decode_kernel,
         }
         with open(args.trace_out, "w") as f:
             json.dump(stats, f, indent=2)

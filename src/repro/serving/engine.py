@@ -29,7 +29,7 @@ import numpy as np
 from repro.core import attention, bgpp as bgpp_mod, bitslice
 from repro.distributed import sharding as sh
 from repro.models import layers, mamba2, moe, transformer
-from repro.serving import kv_cache as kvc
+from repro.serving import kernel_decode, kv_cache as kvc
 
 Tree = Dict[str, Any]
 NEG_INF = attention.NEG_INF
@@ -66,7 +66,19 @@ def _cache_attend(
     # GQA group size from the config RATIO, head count from the operand:
     # under shard_map (the paged BGPP decode's "model" routing) q carries
     # only this device's head shard, and the ratio is shard-invariant
+    if cfg.num_heads % cfg.num_kv_heads:
+        raise ValueError(
+            f"_cache_attend: num_heads={cfg.num_heads} not a multiple of "
+            f"num_kv_heads={cfg.num_kv_heads} — GQA grouping needs an "
+            f"integral ratio"
+        )
     g = cfg.num_heads // cfg.num_kv_heads
+    if Hq % g:
+        raise ValueError(
+            f"_cache_attend: operand carries Hq={Hq} heads, not a multiple "
+            f"of the GQA group size g={g} — a head shard must keep whole "
+            f"(kv-head, group) blocks together"
+        )
     Hk = Hq // g
     scale = Dh**-0.5
     qg = q.reshape(B, Q, Hk, g, Dh).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
@@ -129,7 +141,19 @@ def _bgpp_quant_query(q, cfg):
     """
     B, Hq, Dh = q.shape
     # ratio from the config, count from the operand (shard_map-local safe)
+    if cfg.num_heads % cfg.num_kv_heads:
+        raise ValueError(
+            f"_bgpp_quant_query: num_heads={cfg.num_heads} not a multiple "
+            f"of num_kv_heads={cfg.num_kv_heads} — GQA grouping needs an "
+            f"integral ratio"
+        )
     g = cfg.num_heads // cfg.num_kv_heads
+    if Hq % g:
+        raise ValueError(
+            f"_bgpp_quant_query: operand carries Hq={Hq} heads, not a "
+            f"multiple of the GQA group size g={g} — a head shard must "
+            f"keep whole (kv-head, group) blocks together"
+        )
     Hk = Hq // g
     qg = q.reshape(B, Hk, g, Dh).astype(jnp.float32)
     dq = jnp.maximum(jnp.max(jnp.abs(qg), axis=-1, keepdims=True), 1e-8) / 127.0
@@ -369,7 +393,7 @@ def _paged_kw(layout):
 
 
 def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
-                       phys=None):
+                       phys=None, decode_mode="jnp"):
     """x: (B, 1, D), pos: per-slot (B,) int32.  Returns (out (B,1,D), cache).
 
     Every batch row carries its own position: RoPE angles, the KV write
@@ -380,6 +404,14 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
     gather map — global writes translate through the page table and the
     attend consumes the gathered heads-major view, which holds exactly the
     slot layout's values (bit-identical decode).
+
+    ``decode_mode`` (resolved once at :func:`make_serve_step` build time by
+    :mod:`repro.serving.kernel_decode`): ``"jnp"`` keeps the legacy engine
+    attends; ``"interpret"``/``"compiled"`` route the GLOBAL-layer decode
+    attend through the Pallas paged-attention kernel families (local ring
+    windows and cross-attention stay jnp — their ring/memory layouts are
+    not paged).  The kernel call may decline (mesh the heads don't divide),
+    in which case the jnp path below runs unchanged.
     """
     B = x.shape[0]
     fmt = layout.kv_format
@@ -421,7 +453,13 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
                 cache["global"], gi, k, v, pos,
                 page_table=cache["page_table"], **_paged_kw(layout),
             )
-            if fmt == "bgpp":
+            out = None
+            if decode_mode != "jnp":
+                out = kernel_decode.decode_attend(
+                    q[:, 0], cache["global"], gi, pos, cfg, layout, rules,
+                    decode_mode, phys=phys, page_table=cache["page_table"],
+                )
+            if out is None and fmt == "bgpp":
                 # two-phase attend: bit-planes first, then only the top-k
                 # survivors' full rows — never the whole paged row; on a
                 # mesh the whole thing runs shard_map'd per head shard
@@ -429,7 +467,7 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
                     q[:, 0], cache["global"], gi, phys, valid, cfg,
                     layout, rules,
                 )
-            else:
+            elif out is None:
                 entry = kvc.paged_entry(cache["global"], gi, phys)
                 # pin the gathered view as a materialization point: without
                 # it XLA fuses the page gather INTO the attend, and the
@@ -440,12 +478,19 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
                 out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
         else:
             cache["global"] = kvc.write_token(cache["global"], gi, k, v, pos)
-            store = cache["global"]
-            entry = {n: store[n][gi] for n in store}
-            if fmt == "bgpp":
-                out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
-            else:
-                out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
+            out = None
+            if decode_mode != "jnp":
+                out = kernel_decode.decode_attend(
+                    q[:, 0], cache["global"], gi, pos, cfg, layout, rules,
+                    decode_mode,
+                )
+            if out is None:
+                store = cache["global"]
+                entry = {n: store[n][gi] for n in store}
+                if fmt == "bgpp":
+                    out = _bgpp_decode_attend(q[:, 0], entry, valid, cfg)
+                else:
+                    out = _decode_attend(q[:, 0], entry, valid, cfg, fmt)
 
     # the attend reduction's ONLY collective: all-gather the per-head f32
     # outputs across "model" before the replicated wo contraction.  Pure
@@ -532,6 +577,12 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     dtype = layers._dtype(cfg.dtype)
     thetas = transformer.layer_thetas(cfg) if cfg.family != "ssm" else None
     cspecs = kvc.cache_specs(cfg, layout)
+    # decode_kernel knob, resolved ONCE per built step (env > config >
+    # backend): "jnp" keeps every legacy path bit-for-bit; kernel modes
+    # route global-layer decode attends through repro.kernels families
+    decode_mode = kernel_decode.resolve(cfg)
+    if decode_mode != "jnp" and layout.global_layers:
+        kernel_decode.validate(cfg, layout)
 
     def serve_step(params, cache, tokens):
         """One batched decode token for every slot at its own position."""
@@ -555,7 +606,7 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
                 p = jax.tree.map(lambda a: a[i], params["layers"])
                 a, cache = _attn_decode_layer(
                     p, cfg, layout, cache, x, pos, i, float(thetas[i]), rules,
-                    phys=phys,
+                    phys=phys, decode_mode=decode_mode,
                 )
                 x = x + a
                 x = x + _ffn_decode_layer(p, cfg, x, rules)
@@ -576,7 +627,7 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
                     pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
                     a, cache = _attn_decode_layer(
                         pa, cfg, layout, cache, x, pos, i, cfg.rope_theta,
-                        rules, phys=phys,
+                        rules, phys=phys, decode_mode=decode_mode,
                     )
                     x = x + a
                 else:
@@ -590,7 +641,7 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
                 pa = {"attn_norm": p["norm1"], "attn": p["attn"]}
                 a, cache = _attn_decode_layer(
                     pa, cfg, layout, cache, x, pos, i, cfg.rope_theta, rules,
-                    phys=phys,
+                    phys=phys, decode_mode=decode_mode,
                 )
                 x = x + a
                 # cross attention over the (precomputed) encoder memory

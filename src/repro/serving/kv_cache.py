@@ -656,6 +656,21 @@ def bgpp_decode_plan(S: int, cfg) -> Tuple[int, int, Tuple[int, ...]]:
     prices the same tuple — so the reported counter can never drift from
     the shapes the engine actually gathers."""
     mo = cfg.mcbp
+    if S < 1:
+        raise ValueError(
+            f"bgpp_decode_plan: cache width S={S} must be >= 1 — was the "
+            f"layout built with max_seq=0?"
+        )
+    if mo.bgpp_rounds < 1:
+        raise ValueError(
+            f"bgpp_decode_plan: bgpp_rounds={mo.bgpp_rounds} must be >= 1 "
+            f"(round 0 always scans the MSB plane)"
+        )
+    if not (0.0 < mo.bgpp_keep_ratio <= 1.0):
+        raise ValueError(
+            f"bgpp_decode_plan: bgpp_keep_ratio={mo.bgpp_keep_ratio} must "
+            f"be in (0, 1] — it sizes the surviving candidate set"
+        )
     rounds = max(1, min(mo.bgpp_rounds, NBITS))
     k_max = max(1, min(S, int(math.ceil(mo.bgpp_keep_ratio * S))))
     survivors = (S,) + tuple(max(k_max, S >> r) for r in range(1, rounds))

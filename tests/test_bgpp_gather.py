@@ -206,6 +206,44 @@ class TestServeStepAccessStructure:
             " shows a full-width int8 row"
         )
 
+    def test_kernel_dispatch_serve_step_never_materializes_full_rows(
+        self, monkeypatch
+    ):
+        """The same structural claim on the KERNEL-routed decode graph:
+        with ``decode_kernel=interpret`` the global attend becomes a
+        ``pallas_call`` over the token-major pools, and the traced step —
+        including every sub-jaxpr the interpreter carries — must still
+        never hold a full-width int8 KV row.  The kernel consumes packed
+        planes and gathers k_max compacted rows per (b, h) cell, so a
+        full-row aval appearing here means the dispatch path regressed to
+        a dense-entry gather."""
+        from repro.models import model_zoo
+        from repro.serving import kernel_decode
+
+        monkeypatch.setenv(kernel_decode.ENV_VAR, "interpret")
+        cfg = _cfg()
+        params, _ = model_zoo.init(jax.random.key(0), cfg)
+        lp = kvc.layout_for(cfg, B, S_MAX, kv_format="bgpp", layout="paged",
+                            page_size=PAGE)
+        cache = kvc.init_cache_arrays(cfg, lp)
+        cache["page_table"] = kvc.identity_page_table(lp)
+        step = engine.make_serve_step(cfg, lp)
+        closed = jax.make_jaxpr(step)(
+            params, cache, jnp.zeros((B, 1), jnp.int32)
+        )
+        Hk, Dh = cfg.num_kv_heads, cfg.head_dim
+        forbidden = {(B, S_MAX, Hk, Dh), (B, Hk, S_MAX, Dh)}
+        hits = [
+            a for a in _iter_avals(closed.jaxpr)
+            if getattr(a, "dtype", None) == jnp.int8
+            and tuple(getattr(a, "shape", ())) in forbidden
+        ]
+        assert not hits, (
+            "kernel-dispatch paged bgpp serve_step materialized a "
+            "full-width int8 KV row — the fused kernel path regressed to "
+            "a full-entry gather"
+        )
+
 
 class TestKvReadAccounting:
     def test_bgpp_reads_planes_plus_at_most_keep_full_rows(self):
