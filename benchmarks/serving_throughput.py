@@ -8,6 +8,7 @@ plus the paged KV cache under a shared-system-prompt trace.
         [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] [--mesh 2,4] \\
         [--decode-kernel auto|jnp|interpret|kernel] \\
+        [--weight-format bf16|int8|bstc] \\
         [--baseline BENCH_serving.json] [--out BENCH_serving.json]
 
 All runtimes drive the SAME jitted serve_step and the same seeded request
@@ -35,6 +36,15 @@ WELL under the bf16 row — that ordering is part of the gate.  Runs on CPU
 via interpret-mode kernel dispatch (auto-detected off-TPU).  CSV on stdout
 per the benchmark contract; ``--out`` writes the JSON consumed as the
 BENCH_serving baseline.
+
+``--weight-format`` flips the serve-time WEIGHT path (the knob
+``repro.serving.weights`` resolves once per built step): every scheduler
+row then carries ``weight_format`` / ``decode_weight_bytes_per_step``
+columns from ``stats()["weight_read"]``, and the baseline gains a
+``weight_read`` section pricing all three formats statically.  Two weight
+gates run in EVERY invocation including ``--quick``: bstc coded bytes
+must be <= bf16/2, and the measured coded stream must reconcile with the
+closed-form model (``roofline.bstc_weight_traffic``) at 1.0 +- 10%.
 
 ``--mesh DATA,MODEL`` runs every scheduler sharded over a device mesh (KV
 pools heads-parallel on ``model``, slots on ``data``; needs data*model
@@ -83,12 +93,13 @@ except ImportError:  # python benchmarks/serving_throughput.py
     from common import emit, emit_header
 
 from repro.configs import (  # noqa: E402
-    ARCH_REGISTRY, apply_bgpp_overrides, apply_decode_kernel_override,
-    get_config,
+    ARCH_REGISTRY, WEIGHT_FORMATS, apply_bgpp_overrides,
+    apply_decode_kernel_override, apply_weight_format_override, get_config,
 )
 from repro.models import model_zoo  # noqa: E402
 from repro.serving import engine, kernel_decode, kv_cache as kvc  # noqa: E402
 from repro.serving import sharded as shd  # noqa: E402
+from repro.serving import weights as swt  # noqa: E402
 from repro.serving.request import poisson_trace  # noqa: E402
 from repro.serving.scheduler import Scheduler  # noqa: E402
 
@@ -155,6 +166,16 @@ def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
             kv["decode_bytes_per_device_per_step"],
         "interconnect_bytes_per_step": kv["interconnect_bytes_per_step"],
         "interconnect_bytes": kv["interconnect_bytes"],
+    }
+    wr = stats["weight_read"]
+    out |= {
+        "weight_format": wr["weight_format"],
+        "decode_weight_bytes_per_step": wr["decode_bytes_per_step"],
+        "decode_weight_bytes_reduction_vs_bf16":
+            wr["decode_bytes_reduction_vs_bf16"],
+        "weight_measured_over_modeled": wr["measured_over_modeled"],
+        "decode_weight_bytes_per_device_per_step":
+            wr["decode_bytes_per_device_per_step"],
     }
     if "bgpp" in kv:
         out["bgpp_full_rows_per_slot"] = kv["bgpp"]["full_rows_per_slot"]
@@ -245,6 +266,12 @@ def main():
                          "compiled Pallas kernel on TPU, legacy jnp "
                          "elsewhere); every serving row carries the "
                          "resolved mode as a decode_kernel column")
+    ap.add_argument("--weight-format", default=None,
+                    choices=sorted(WEIGHT_FORMATS),
+                    help="serve-time weight numerics for the decode "
+                         "projections (bf16 = raw leaves, bit-for-bit; "
+                         "int8/bstc = quantized records priced by the "
+                         "weight_read counter)")
     ap.add_argument("--quick", action="store_true",
                     help="one format, chunked+eager only — the CI gate")
     ap.add_argument("--baseline", default=None,
@@ -271,7 +298,9 @@ def main():
         rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
     )
     cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
+    cfg = apply_weight_format_override(cfg, args.weight_format)
     dk_mode = kernel_decode.resolve(cfg)
+    wf_mode = swt.resolve(cfg)
     params, _ = model_zoo.init(jax.random.key(0), cfg)
     formats = args.kv_formats.split(",")
     if args.quick:
@@ -284,7 +313,7 @@ def main():
     ok = True
     for fmt in formats:
         layout = kvc.layout_for(cfg, args.slots, args.max_seq, kv_format=fmt)
-        entry = {"decode_kernel": dk_mode,
+        entry = {"decode_kernel": dk_mode, "weight_format": wf_mode,
                  "kv_read_mesh": mesh_kv_entries(layout, cfg)}
         shared = None
         runtimes = ["chunked", "eager"] + ([] if args.quick else ["lockstep"])
@@ -313,7 +342,9 @@ def main():
             if runtime != "lockstep":
                 extra = (f";ttft_p95={r['ttft_s_p95']}"
                          f";itl_p95={r['itl_s_p95']}"
-                         f";kv_step={r['decode_kv_bytes_per_step']}")
+                         f";kv_step={r['decode_kv_bytes_per_step']}"
+                         f";weight_format={r['weight_format']}"
+                         f";w_step={r['decode_weight_bytes_per_step']}")
                 if rules is not None:
                     extra += (f";kv_dev={r['decode_kv_bytes_per_device_per_step']}"
                               f";ic_step={r['interconnect_bytes_per_step']}")
@@ -452,6 +483,49 @@ def main():
         print("# REGRESSION: bgpp decode reads are not well under bf16's")
         ok = False
 
+    # the weight-format mirror of the bgpp ordering gate (fires in --quick
+    # too): every format priced statically from the same params — identical
+    # to the live counter, since the plan IS the counter — then (1) BSTC
+    # coded bytes <= bf16/2 and (2) the measured coded stream reconciles
+    # with the closed-form model (roofline.bstc_weight_traffic on measured
+    # per-plane column sparsities) at 1.0 +- 10%
+    wlayout = kvc.layout_for(cfg, args.slots, args.max_seq,
+                             kv_format=formats[0])
+    weight_entry = {"weight_format": wf_mode}
+    for wf in WEIGHT_FORMATS:
+        _, plan = swt.prepare_serve_params(
+            params, apply_weight_format_override(cfg, wf), wlayout, wf)
+        wrd = plan.decode_read_bytes(wlayout, cfg)
+        weight_entry[wf] = {
+            "decode_bytes_per_step": round(wrd["total"]),
+            "modeled_bytes_per_step": round(wrd["modeled"]),
+            "measured_over_modeled": round(wrd["total"] / wrd["modeled"], 4),
+            "per_projection": {n: round(v)
+                               for n, v in wrd["per_projection"].items()},
+        }
+    results["weight_read"] = weight_entry
+    wb = weight_entry["bstc"]["decode_bytes_per_step"]
+    wf16 = weight_entry["bf16"]["decode_bytes_per_step"]
+    print(f"# weight bytes/decode-step: bstc {wb} vs bf16 {wf16} "
+          f"({wf16 / wb:.2f}x reduction)")
+    if 2 * wb > wf16:
+        print("# REGRESSION: bstc coded weights are not <= bf16/2")
+        ok = False
+    mm = weight_entry["bstc"]["measured_over_modeled"]
+    if not 0.9 <= mm <= 1.1:
+        print(f"# REGRESSION: bstc measured/modeled weight bytes {mm} "
+              f"outside 1.0 +- 10%")
+        ok = False
+    # the live schedulers ran with wf_mode: their counter must equal the
+    # static pricing (weights are layout-independent)
+    for fmt in formats:
+        live = results[fmt]["chunked"]["decode_weight_bytes_per_step"]
+        want = weight_entry[wf_mode]["decode_bytes_per_step"]
+        if live != want:
+            print(f"# REGRESSION {fmt}: live weight counter {live} B/step "
+                  f"!= static {wf_mode} pricing {want}")
+            ok = False
+
     if not args.quick:
         # committed single-device reference for the CI sharded-serving
         # launcher smoke: the exact trace launch/serve.py runs at
@@ -509,7 +583,8 @@ def main():
                 ok = False
 
     print(f"# chunked >= eager occupancy, chunked itl_p95 <= eager, paged "
-          f"prefix reuse + resident-KV win"
+          f"prefix reuse + resident-KV win, bstc weights <= bf16/2 + "
+          f"measured/modeled reconciliation"
           f"{', baseline gate' if args.baseline else ''}: {ok}")
     if args.out:
         with open(args.out, "w") as f:

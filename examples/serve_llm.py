@@ -5,6 +5,7 @@ bit-planar BGPP KV cache).
     PYTHONPATH=src python examples/serve_llm.py [--arch phi4-mini-3.8b]
         [--kv-format int8|bf16|bgpp] [--admission chunked|eager]
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16]
+        [--weight-format bf16|int8|bstc]
         [--chunk-budget 8] [--steps 24] [--batch 4] [--mesh 2,4]
 
 Each request is admitted into its own slot of ONE live cache — by default
@@ -24,8 +25,10 @@ import numpy as np
 
 import jax
 
-from repro.configs import (ARCH_REGISTRY, apply_bgpp_overrides,
-                           apply_decode_kernel_override, get_config)
+from repro.configs import (ARCH_REGISTRY, WEIGHT_FORMATS,
+                           apply_bgpp_overrides,
+                           apply_decode_kernel_override,
+                           apply_weight_format_override, get_config)
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
 from repro.serving import sharded as shd
@@ -54,6 +57,11 @@ def main():
                     choices=["auto", "jnp", "interpret", "kernel"],
                     help="global-layer decode attend: jnp (legacy) or the "
                          "Pallas paged-attention kernels (default: config's)")
+    ap.add_argument("--weight-format", default=None,
+                    choices=sorted(WEIGHT_FORMATS),
+                    help="serve-time weight numerics for decode projections "
+                         "(bf16 raw default; int8/bstc quantized records "
+                         "with weight_read pricing) (default: config's)")
     ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
@@ -71,6 +79,7 @@ def main():
         rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
     )
     cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
+    cfg = apply_weight_format_override(cfg, args.weight_format)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("this driver serves transformer families; "
                          "see tests/test_serving.py for ssm/hybrid/enc-dec")
@@ -129,6 +138,12 @@ def main():
           f"bf16-equivalent ({kv['decode_bytes_reduction_vs_bf16']}x); "
           f"bgpp full rows/slot/layer: "
           f"{kv.get('bgpp', {}).get('full_rows_per_slot', '-')}")
+    wr = stats["weight_read"]
+    print(f"[serve] weight read/decode-step ({wr['weight_format']}): "
+          f"{wr['decode_bytes_per_step']/1e3:.1f} kB vs "
+          f"{wr['decode_bf16_equiv_bytes_per_step']/1e3:.1f} kB "
+          f"bf16-equivalent ({wr['decode_bytes_reduction_vs_bf16']}x, "
+          f"measured/modeled {wr['measured_over_modeled']})")
     if args.mesh:
         print(f"[serve] mesh {kv['mesh']['data']}x{kv['mesh']['model']}: "
               f"{kv['decode_bytes_per_device_per_step']/1e3:.1f} kB/device/"

@@ -88,6 +88,9 @@ class RooflineReport:
     xla_flops: float = 0.0  # cost_analysis (loop bodies counted once)
     xla_bytes: float = 0.0
     loop_mults: Optional[Dict[str, float]] = None
+    # measured serve-time weight traffic per decode step (the scheduler's
+    # weight_read counter / WeightPlan total; 0.0 when not supplied)
+    weight_read_bytes: float = 0.0
 
     hw: HW = V5E
 
@@ -154,6 +157,7 @@ class RooflineReport:
             "xla_flops": self.xla_flops,
             "xla_bytes": self.xla_bytes,
             "loop_mults": self.loop_mults,
+            "weight_read_bytes": self.weight_read_bytes,
         }
 
 
@@ -199,6 +203,59 @@ def bgpp_kernel_traffic(
         "reduction": dense / bytes_,
         "k_max": k_max,
         "output_write_bytes": D * 4.0,
+    }
+
+
+def bstc_weight_traffic(
+    in_dim: int,
+    out_dim: int,
+    m: int = 4,
+    nbits: int = 7,
+    col_sparsity=None,
+    dtype_bytes: int = 2,
+) -> Dict[str, float]:
+    """Closed-form serve-time HBM bytes of ONE ``(in, out)`` projection
+    under the BSTC two-state weight coding (paper §4.1).
+
+    Per magnitude plane ``p`` with ``m``-bit column sparsity ``sc_p`` the
+    coded stream is ``in·out / CR(m, sc_p)`` bits
+    (:func:`repro.core.bstc.compression_ratio_closed_form`); the sign
+    plane is always raw (``in·out`` bits) and the f32 output-channel
+    scales add ``4·out`` bytes.  ``col_sparsity`` is a per-plane sequence
+    — ``None`` entries mean the encoder kept that plane raw (sparsity
+    below threshold or coding would not shrink it), matching
+    ``encode_weight``'s per-plane decision, so feeding the MEASURED column
+    sparsities reproduces the measured stream to within byte rounding
+    (the ±10% reconciliation gate in the serving bench rides on this).
+    Omitting ``col_sparsity`` prices every plane raw — plain int8.
+
+    Returns coded bytes plus the int8/bf16 baselines and reductions.
+    """
+    from repro.core.bstc import compression_ratio_closed_form
+
+    if col_sparsity is None:
+        col_sparsity = [None] * nbits
+    if len(col_sparsity) != nbits:
+        raise ValueError(
+            f"col_sparsity has {len(col_sparsity)} entries, expected "
+            f"nbits={nbits}"
+        )
+    n = float(in_dim) * float(out_dim)
+    bits = n  # sign plane, always raw
+    for sc in col_sparsity:
+        if sc is None:
+            bits += n
+        else:
+            bits += n / compression_ratio_closed_form(m, float(sc))
+    coded = bits / 8.0 + 4.0 * out_dim
+    int8 = n + 4.0 * out_dim
+    bf16 = dtype_bytes * n
+    return {
+        "bstc_bytes": coded,
+        "int8_bytes": int8,
+        "bf16_bytes": bf16,
+        "reduction_vs_int8": int8 / coded,
+        "reduction_vs_bf16": bf16 / coded,
     }
 
 

@@ -2,8 +2,10 @@ from repro.configs.base import (  # noqa: F401
     ARCH_REGISTRY,
     MCBPOptions,
     ModelConfig,
+    WEIGHT_FORMATS,
     apply_bgpp_overrides,
     apply_decode_kernel_override,
+    apply_weight_format_override,
     get_config,
 )
 from repro.configs import shapes  # noqa: F401

@@ -10,11 +10,16 @@ ShapeDtypeStructs — no allocation).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 # --------------------------------------------------------------------------
 # MCBP feature switches (the paper's three techniques).
 # --------------------------------------------------------------------------
+
+# serve-time weight numerics (repro.serving.weights consumes the knob at
+# make_serve_step build time; REPRO_WEIGHT_FORMAT overrides for CI matrices)
+WEIGHT_FORMATS = ("bf16", "int8", "bstc")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,7 +29,9 @@ class MCBPOptions:
     group_size: int = 4  # paper §5.2 DSE: m=4
     weight_bits: int = 8  # INT8 weights (7 magnitude bits + sign)
     # BSTC
-    bstc_weights: bool = False  # serve from two-state-coded weights
+    # deprecated: bstc_weights=True is shimmed to weight_format="bstc" in
+    # __post_init__ (the two knobs used to be able to contradict each other)
+    bstc_weights: bool = False
     bstc_threshold: float = 0.65
     # BGPP
     bgpp_attention: bool = False  # progressive bit-grained top-k on decode
@@ -32,12 +39,31 @@ class MCBPOptions:
     bgpp_alpha: float = 0.55  # paper §6: 0.5-0.6
     bgpp_radius: float = 3.0
     bgpp_keep_ratio: float = 0.25  # k_max = ceil(ratio * S) for static gather
-    # weight numerics for serving: "bf16" | "int8" | "bstc"
+    # weight numerics for serving: "bf16" | "int8" | "bstc" — resolved once
+    # at make_serve_step build (see repro.serving.weights)
     weight_format: str = "bf16"
     # global-layer decode attend routing: "auto" | "jnp" | "interpret" |
     # "kernel" — auto = compiled Pallas kernel on TPU backends, legacy jnp
     # attend elsewhere (see repro.serving.kernel_decode)
     decode_kernel: str = "auto"
+
+    def __post_init__(self):
+        if self.bstc_weights:
+            warnings.warn(
+                "MCBPOptions.bstc_weights is deprecated — set "
+                "weight_format='bstc' instead (bstc_weights=True is mapped "
+                "to it; an explicit non-bf16 weight_format wins)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if self.weight_format == "bf16":
+                object.__setattr__(self, "weight_format", "bstc")
+        if self.weight_format not in WEIGHT_FORMATS:
+            raise ValueError(
+                f"weight_format={self.weight_format!r} is not one of "
+                f"{WEIGHT_FORMATS} (config mcbp.weight_format or "
+                f"$REPRO_WEIGHT_FORMAT)"
+            )
 
 
 def apply_decode_kernel_override(cfg, mode: Optional[str] = None):
@@ -48,6 +74,19 @@ def apply_decode_kernel_override(cfg, mode: Optional[str] = None):
         return cfg
     return dataclasses.replace(
         cfg, mcbp=dataclasses.replace(cfg.mcbp, decode_kernel=str(mode))
+    )
+
+
+def apply_weight_format_override(cfg, fmt: Optional[str] = None):
+    """Return ``cfg`` with its ``weight_format`` knob replaced (``None``
+    keeps the config's value) — the one code path behind every CLI's
+    ``--weight-format`` flag.  Validation happens in
+    :meth:`MCBPOptions.__post_init__`, so a typo raises here, at config
+    time."""
+    if fmt is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, mcbp=dataclasses.replace(cfg.mcbp, weight_format=str(fmt))
     )
 
 

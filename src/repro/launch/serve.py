@@ -6,6 +6,7 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
         [--admission chunked|eager] [--chunk-budget 16] \\
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
+        [--weight-format bf16|int8|bstc] \\
         [--trace-out trace.json] [--mesh 2,4 | --data 1 --model 1]
 
 Requests arrive on a Poisson-ish trace with distinct prompt lengths and
@@ -22,7 +23,11 @@ re-prefilling them, bit-identically to the slot layout.  ``--kv-format
 bgpp`` decodes two-phase — bit-plane top-k prediction first
 (``--bgpp-rounds``), then a full-precision gather of only the surviving
 ``--bgpp-keep-ratio`` fraction of keys — and the KV bytes each step read
-are reported (``kv_read`` in the stats/trace).  ``--trace-out`` dumps
+are reported (``kv_read`` in the stats/trace).  ``--weight-format``
+flips the decode projections onto the serve-time weight path
+(``repro.serving.weights``): int8/bstc quantized records with the
+``weight_read`` byte counter priced from the BSTC coded layout, bf16 the
+bit-for-bit raw default.  ``--trace-out`` dumps
 per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
 throughput as JSON so runs are reproducible (``--seed``) and comparable
 across PRs.
@@ -38,8 +43,10 @@ import numpy as np
 
 import jax
 
-from repro.configs import (ARCH_REGISTRY, apply_bgpp_overrides,
-                           apply_decode_kernel_override, get_config)
+from repro.configs import (ARCH_REGISTRY, WEIGHT_FORMATS,
+                           apply_bgpp_overrides,
+                           apply_decode_kernel_override,
+                           apply_weight_format_override, get_config)
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_debug_mesh
 from repro.models import model_zoo
@@ -76,6 +83,13 @@ def main():
                     help="fraction of keys fetched at full precision by "
                          "the bgpp top-k decode (default: the config's, "
                          "usually 0.25)")
+    ap.add_argument("--weight-format", default=None,
+                    choices=sorted(WEIGHT_FORMATS),
+                    help="serve-time weight numerics for the decode "
+                         "projections: bf16 (raw leaves, bit-for-bit "
+                         "default), int8, or bstc (two-state coded pricing "
+                         "in weight_read) (default: config's; env "
+                         "REPRO_WEIGHT_FORMAT overrides)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
@@ -109,6 +123,7 @@ def main():
         rounds=args.bgpp_rounds, keep_ratio=args.bgpp_keep_ratio,
     )
     cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
+    cfg = apply_weight_format_override(cfg, args.weight_format)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("continuous batching driver covers transformer "
                          "families; ssm/hybrid/enc-dec decode in tests/")
@@ -168,6 +183,15 @@ def main():
           f"({kv['interconnect_bytes']/1e6:.2f} MB total: attend all-gather "
           f"{kv['interconnect']['attend_allgather']/1e3:.2f} kB/step + paged "
           f"write bcast {kv['interconnect']['paged_write_bcast']/1e3:.2f})")
+    wr = stats["weight_read"]
+    print(f"[serve] weight read ({wr['weight_format']}): "
+          f"{wr['decode_bytes']/1e6:.2f} MB decode + "
+          f"{wr['prefill_bytes']/1e6:.2f} MB prefill; "
+          f"{wr['decode_bytes_per_step']/1e3:.1f} kB/decode-step "
+          f"(bf16-equivalent "
+          f"{wr['decode_bf16_equiv_bytes_per_step']/1e3:.1f} kB, "
+          f"{wr['decode_bytes_reduction_vs_bf16']}x reduction, "
+          f"measured/modeled {wr['measured_over_modeled']})")
     if "bgpp" in kv:
         bg = kv["bgpp"]
         print(f"[serve] bgpp two-phase: {bg['rounds']} rounds, "
@@ -195,6 +219,7 @@ def main():
             "bgpp_rounds": cfg.mcbp.bgpp_rounds,
             "bgpp_keep_ratio": cfg.mcbp.bgpp_keep_ratio,
             "decode_kernel": cfg.mcbp.decode_kernel,
+            "weight_format": sched.weight_format,
         }
         with open(args.trace_out, "w") as f:
             json.dump(stats, f, indent=2)

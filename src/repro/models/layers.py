@@ -118,6 +118,29 @@ def sinusoidal_positions(num_pos: int, dim: int) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# Weight contraction (raw leaf or quantized serve record)
+# --------------------------------------------------------------------------
+
+
+def wdot(x: jax.Array, w) -> jax.Array:
+    """``x @ w`` for a raw weight leaf OR a serve-time quantized record.
+
+    ``repro.serving.weights.prepare_serve_params`` replaces projection
+    leaves with ``{"q": int8 (in, out), "scale": f32 (out,)}`` records when
+    ``weight_format`` is int8/bstc; this helper dequantizes the record to
+    the dense reconstruction (the parity oracle) and contracts in the
+    activation dtype.  Raw arrays take the plain matmul — the bf16 default
+    path is byte-for-byte the old ``x @ w``.
+    """
+    if isinstance(w, dict) and "q" in w:
+        dq = w["q"].astype(jnp.float32) * w["scale"][..., None, :].astype(
+            jnp.float32
+        )
+        return x @ dq.astype(x.dtype)
+    return x @ w
+
+
+# --------------------------------------------------------------------------
 # Activations / MLP
 # --------------------------------------------------------------------------
 
@@ -165,11 +188,11 @@ def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype):
 
 def mlp_apply(params, x: jax.Array, activation: str) -> jax.Array:
     if activation in ("swiglu", "geglu"):
-        gate = x @ params["gate"]
-        up = x @ params["up"]
-        return (glu_act(activation, gate) * up) @ params["down"]
-    h = jax.nn.gelu(x @ params["up"] + params["up_b"], approximate=True)
-    return h @ params["down"] + params["down_b"]
+        gate = wdot(x, params["gate"])
+        up = wdot(x, params["up"])
+        return wdot(glu_act(activation, gate) * up, params["down"])
+    h = jax.nn.gelu(wdot(x, params["up"]) + params["up_b"], approximate=True)
+    return wdot(h, params["down"]) + params["down_b"]
 
 
 # --------------------------------------------------------------------------
@@ -224,9 +247,9 @@ def qkv_project(
     qk_norm: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     B, S, _ = x.shape
-    q = (x @ params["wq"]).reshape(B, S, num_heads, head_dim)
-    k = (x @ params["wk"]).reshape(B, S, num_kv_heads, head_dim)
-    v = (x @ params["wv"]).reshape(B, S, num_kv_heads, head_dim)
+    q = wdot(x, params["wq"]).reshape(B, S, num_heads, head_dim)
+    k = wdot(x, params["wk"]).reshape(B, S, num_kv_heads, head_dim)
+    v = wdot(x, params["wv"]).reshape(B, S, num_kv_heads, head_dim)
     if qk_norm:
         q = rms_norm(q, params["q_norm"]["scale"])
         k = rms_norm(k, params["k_norm"]["scale"])

@@ -3,4 +3,11 @@ engine — KV-cache containers (slot and paged layouts), the chunked-prefill
 admission path, the host-side page allocator with prefix reuse, and the
 request scheduler.  See docs/ARCHITECTURE.md for the data-flow map."""
 
-from repro.serving import engine, kv_cache, paging, request, scheduler  # noqa: F401
+from repro.serving import (  # noqa: F401
+    engine,
+    kv_cache,
+    paging,
+    request,
+    scheduler,
+    weights,
+)

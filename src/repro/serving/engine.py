@@ -29,7 +29,7 @@ import numpy as np
 from repro.core import attention, bgpp as bgpp_mod, bitslice
 from repro.distributed import sharding as sh
 from repro.models import layers, mamba2, moe, transformer
-from repro.serving import kernel_decode, kv_cache as kvc
+from repro.serving import kernel_decode, kv_cache as kvc, weights as swt
 
 Tree = Dict[str, Any]
 NEG_INF = attention.NEG_INF
@@ -498,7 +498,7 @@ def _attn_decode_layer(p, cfg, layout, cache, x, pos, layer_idx, theta, rules,
     # stays bit-exact vs single-device — this is the priced interconnect
     # term in kv_cache._interconnect_decode.
     out = sh.constrain(out.reshape(B, 1, -1), rules, (sh.BATCH, None, None))
-    out = out @ p["attn"]["wo"]
+    out = layers.wdot(out, p["attn"]["wo"])
     if cfg.post_norms and "post_attn_norm" in p:
         out = layers.apply_norm(out, p["post_attn_norm"], cfg.norm)
     return out, cache
@@ -583,9 +583,19 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     decode_mode = kernel_decode.resolve(cfg)
     if decode_mode != "jnp" and layout.global_layers:
         kernel_decode.validate(cfg, layout)
+    # weight_format knob, resolved ONCE per built step exactly like
+    # decode_kernel (env > config): "bf16" leaves every contraction
+    # byte-for-byte the raw-leaf path; int8/bstc require the quantized
+    # records weights.prepare_serve_params builds (the scheduler feeds
+    # them) and layers.wdot dequantizes at trace time
+    weight_format = swt.resolve(cfg)
+    if weight_format != "bf16":
+        swt.validate(cfg)
 
     def serve_step(params, cache, tokens):
         """One batched decode token for every slot at its own position."""
+        if weight_format != "bf16":
+            swt.check_serve_params(params, cfg, weight_format)
         pos = cache["pos"]  # per-slot (B,) int32 positions
         B = tokens.shape[0]
         # paged: one logical->pool gather map serves every global layer
@@ -664,7 +674,9 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
 
         x = layers.apply_norm(x, params["final_norm"], cfg.norm)
         head = params.get("lm_head")
-        logits = x @ (head if head is not None else params["embed"].T.astype(dtype))
+        if head is None:  # tied: non-bf16 serve params carry an explicit record
+            head = params["embed"].T.astype(dtype)
+        logits = layers.wdot(x, head)
         logits = sh.constrain(logits, rules, (sh.BATCH, None, sh.VOCAB))
         cache["pos"] = pos + 1
         # pin output placements so donated cache buffers are reused in

@@ -6,12 +6,13 @@ import numpy as np
 import pytest
 from repro.testing.hypcompat import given, settings, st
 
-from repro.analysis.roofline import bgpp_kernel_traffic
-from repro.configs import get_config
+from repro.analysis.roofline import bgpp_kernel_traffic, bstc_weight_traffic
+from repro.configs import apply_weight_format_override, get_config
 from repro.configs.base import ModelConfig
 from repro.core import attention, bstc
-from repro.models import moe
+from repro.models import model_zoo, moe
 from repro.serving import kv_cache as kvc
+from repro.serving import weights as swt
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -221,6 +222,83 @@ class TestKVReadAccountingLaws:
             assert ck["interconnect"]["paged_write_bcast"] == 0.0
             dk = kvc.decode_read_bytes(lay, self.CFG, mesh)
             assert dk["interconnect"]["paged_write_bcast"] > 0.0
+
+
+class TestWeightReadAccountingLaws:
+    """Laws of the serve-time weight-read plan (repro.serving.weights):
+    per-placement device shares recombine to the single-device total on
+    every mesh, the bf16 plan prices the raw dense bytes exactly, bstc
+    coding halves (better) the bf16 traffic at the paper's bit-level
+    sparsity, and the closed-form traffic model is the measured stream's
+    formula (the bench's ±10% reconciliation gate rides on that)."""
+
+    _CACHE = {}
+
+    @classmethod
+    def _plan(cls, fmt):
+        if fmt not in cls._CACHE:
+            # deepseek smoke: 4 q / 4 kv heads — divisible by every model
+            # size below (same geometry the kv-read laws lean on)
+            cfg = apply_weight_format_override(
+                get_config("deepseek-7b", smoke=True), fmt)
+            params, _ = model_zoo.init(jax.random.key(0), cfg)
+            lay = kvc.layout_for(cfg, 4, 48, kv_format="bf16")
+            _, plan = swt.prepare_serve_params(params, cfg, lay, fmt)
+            cls._CACHE[fmt] = (cfg, lay, plan)
+        return cls._CACHE[fmt]
+
+    @given(
+        st.sampled_from(["bf16", "int8", "bstc"]),
+        st.sampled_from([(1, 1), (2, 1), (1, 2), (1, 4), (2, 4), (4, 2)]),
+    )
+    @settings(max_examples=18, deadline=None)
+    def test_per_device_times_shards_is_total(self, fmt, mesh):
+        cfg, lay, plan = self._plan(fmt)
+        out = plan.decode_read_bytes(lay, cfg, mesh)
+        recomposed = sum(
+            out["per_device_by_placement"][p] * out["shards_by_placement"][p]
+            for p in out["per_device_by_placement"]
+        )
+        np.testing.assert_allclose(recomposed, out["total"])
+        np.testing.assert_allclose(out["total"], plan.total_bytes)
+        np.testing.assert_allclose(
+            sum(out["per_projection"].values()), out["total"])
+
+    def test_bf16_plan_prices_dense_bytes_exactly(self):
+        cfg, _, plan = self._plan("bf16")
+        db = 2 if cfg.dtype == "bfloat16" else 4
+        for e in plan.entries:
+            want = db * e.copies * e.in_dim * e.out_dim
+            assert e.coded_bytes == e.bf16_bytes == want, e.path
+
+    def test_bstc_coded_at_most_half_of_bf16(self):
+        cfg, lay, plan = self._plan("bstc")
+        assert plan.total_bytes <= plan.bf16_bytes / 2, (
+            "BSTC coding must at least halve bf16 weight traffic at the "
+            "paper's bit-level sparsity")
+        out = plan.decode_read_bytes(lay, cfg, (1, 1))
+        assert 0.9 <= out["total"] / out["modeled"] <= 1.1, (
+            "measured coded stream must reconcile with the closed form")
+
+    @given(st.sampled_from([0.7, 0.8, 0.95]), st.sampled_from([2, 4, 8]))
+    @settings(max_examples=9, deadline=None)
+    def test_traffic_model_matches_closed_form(self, sc, m):
+        nbits, in_dim, out_dim = 7, 128, 64
+        out = bstc_weight_traffic(
+            in_dim, out_dim, m=m, nbits=nbits, col_sparsity=[sc] * nbits)
+        n = in_dim * out_dim
+        bits = n + nbits * n / bstc.compression_ratio_closed_form(m, sc)
+        np.testing.assert_allclose(out["bstc_bytes"], bits / 8 + 4 * out_dim)
+
+    def test_traffic_model_monotone_in_sparsity(self):
+        vals = [
+            bstc_weight_traffic(128, 64, col_sparsity=[s] * 7)["bstc_bytes"]
+            for s in (0.65, 0.8, 0.95)
+        ]
+        assert vals[0] > vals[1] > vals[2]
+        # raw pricing (no sparsity) is plain int8 + scales
+        raw = bstc_weight_traffic(128, 64)
+        np.testing.assert_allclose(raw["bstc_bytes"], raw["int8_bytes"])
 
 
 class TestDispatchRoundTripLaws:

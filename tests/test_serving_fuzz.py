@@ -35,7 +35,7 @@ import pytest
 
 import jax
 
-from repro.configs import get_config
+from repro.configs import apply_weight_format_override, get_config
 from repro.configs.base import MCBPOptions
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
@@ -153,8 +153,13 @@ def _run(cfg, params, layout, reqs, shared=None, admission="chunked",
     if sched.pager is not None:
         sched.pager.check()
     # the kv-read counter must account exactly for the executed steps
-    kv = sched.stats()["kv_read"]
+    stats = sched.stats()
+    kv = stats["kv_read"]
     assert kv["decode_bytes"] == kv["decode_steps"] * kv["decode_bytes_per_step"]
+    # ... and so must the weight-read counter (same step count, static
+    # per-step price from the serve-time weight plan)
+    wr = stats["weight_read"]
+    assert wr["decode_bytes"] == wr["decode_steps"] * wr["decode_bytes_per_step"]
     if layout.kv_format == "bgpp":
         assert kv["bgpp"]["full_rows_per_slot"] <= math.ceil(
             cfg.mcbp.bgpp_keep_ratio * layout.max_seq
@@ -204,14 +209,18 @@ def _compare_to_alone_runs(cfg, params, reqs, joint, arch_key, kv_format,
 
 
 def _fuzz_oracle(arch_key, kv_format, seed, n_requests, layout="slot",
-                 admission="chunked"):
+                 admission="chunked", weight_format=None):
     seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
     rng = np.random.default_rng(seed)
     cfg, params = _model(arch_key)
+    if weight_format is not None:
+        cfg = apply_weight_format_override(cfg, weight_format)
     reqs = _random_requests(rng, cfg, n_requests,
                             teacher_forced=kv_format != "bf16")
     meta = {"oracle": "fuzz", "arch": arch_key, "kv_format": kv_format,
             "layout": layout, "admission": admission, "seed": seed}
+    if weight_format is not None:
+        meta["weight_format"] = weight_format
     with _dump_failing_trace(meta, reqs):
         joint_sched, joint = _run(
             cfg, params, _layout_for(cfg, kv_format, layout),
@@ -311,6 +320,36 @@ class TestFuzzOracle:
     @pytest.mark.slow
     def test_dense_bf16_heavy(self, rng_seed, layout):
         _fuzz_oracle("dense", "bf16", rng_seed + 1, 7, layout=layout)
+
+
+@pytest.mark.parametrize("weight_format", ["int8", "bstc"])
+class TestWeightFormatOracle:
+    """weight_format axis of the fuzz matrix: the quantized serve-time
+    weight path must be scheduling-invariant.  Joint staggered runs and
+    alone runs derive IDENTICAL records from the same raw params, so with
+    bf16 KV every logit row is bit-exact between them — any divergence
+    means the weight path leaks scheduling state (slot order, admission
+    interleaving) into the projections."""
+
+    def test_dense_slot(self, rng_seed, weight_format):
+        _fuzz_oracle("dense", "bf16", rng_seed, 4,
+                     weight_format=weight_format)
+
+    def test_dense_paged(self, rng_seed, weight_format):
+        _fuzz_oracle("dense", "bf16", rng_seed, 4, layout="paged",
+                     weight_format=weight_format)
+
+    @pytest.mark.slow
+    def test_dense_int8_kv(self, rng_seed, weight_format):
+        # both axes quantized at once: int8 KV fuzz tolerance still holds
+        # with the weight path quantized identically on both sides
+        _fuzz_oracle("dense", "int8", rng_seed, 4,
+                     weight_format=weight_format)
+
+    @pytest.mark.slow
+    def test_swa_slot(self, rng_seed, weight_format):
+        _fuzz_oracle("swa", "bf16", rng_seed, 4,
+                     weight_format=weight_format)
 
 
 # --------------------------------------------------------------------------

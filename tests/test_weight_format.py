@@ -1,0 +1,253 @@
+"""Serve-time ``weight_format`` knob: config validation, env resolution,
+record conversion, and scheduler-level serve parity.
+
+The parity suite pins the quantized path to its dense-reconstruction
+oracle: a plain bf16-built serve_step fed ``weights.dequantize`` of the
+SAME records must produce bit-identical logits — ``layers.wdot``'s record
+branch computes exactly ``x @ dequantize(rec).astype(x.dtype)``.  The
+bf16 default stays byte-for-byte the old path (``prepare_serve_params``
+returns the params object untouched), and ``bstc`` serves the identical
+records as ``int8`` (the two-state coding is lossless; only the
+``weight_read`` pricing differs).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import (WEIGHT_FORMATS, apply_weight_format_override,
+                           get_config)
+from repro.configs.base import MCBPOptions
+from repro.models import layers, model_zoo
+from repro.serving import kv_cache as kvc
+from repro.serving import weights as swt
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler
+
+jax.config.update("jax_platform_name", "cpu")
+
+SLOTS = 2
+MAX_SEQ = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _layout(cfg):
+    return kvc.layout_for(cfg, SLOTS, MAX_SEQ, kv_format="bf16")
+
+
+def _requests(cfg, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                (int(rng.integers(4, 12)),)).astype(np.int32),
+            max_new_tokens=6,
+            arrival_step=0,
+        )
+        for rid in range(n)
+    ]
+
+
+def _run_sched(cfg, params, reqs, serve_params_override=None):
+    sched = Scheduler(params, cfg, _layout(cfg), chunk_budget=6,
+                      record_logits=True)
+    if serve_params_override is not None:
+        # decode-only override: prefill still reads sched.params (raw), so
+        # the oracle run prefills identically to the run under test
+        sched.serve_params = serve_params_override
+    for r in reqs:
+        sched.submit(r)
+    sched.run(max_steps=500)
+    assert len(sched.finished) == len(reqs), "trace did not drain"
+    return sched, {r.rid: r for r in sched.finished}
+
+
+def _dequantized_tree(tree, dtype):
+    if swt.is_record(tree):
+        return swt.dequantize(tree, dtype)
+    if isinstance(tree, dict):
+        return {k: _dequantized_tree(v, dtype) for k, v in tree.items()}
+    return tree
+
+
+# --------------------------------------------------------------------------
+# config-time validation + deprecation shim
+# --------------------------------------------------------------------------
+
+
+class TestConfigKnob:
+    def test_rejects_unknown_format_at_config_time(self):
+        with pytest.raises(ValueError, match="weight_format"):
+            MCBPOptions(weight_format="fp4")
+
+    def test_accepts_every_registered_format(self):
+        for fmt in WEIGHT_FORMATS:
+            assert MCBPOptions(weight_format=fmt).weight_format == fmt
+
+    def test_bstc_weights_shim_warns_and_maps(self):
+        with pytest.warns(DeprecationWarning, match="bstc_weights"):
+            opt = MCBPOptions(bstc_weights=True)
+        assert opt.weight_format == "bstc"
+
+    def test_explicit_non_bf16_format_wins_over_shim(self):
+        with pytest.warns(DeprecationWarning):
+            opt = MCBPOptions(bstc_weights=True, weight_format="int8")
+        assert opt.weight_format == "int8"
+
+    def test_apply_override(self, model):
+        cfg, _ = model
+        assert apply_weight_format_override(cfg, None) is cfg
+        assert apply_weight_format_override(
+            cfg, "bstc").mcbp.weight_format == "bstc"
+        with pytest.raises(ValueError, match="weight_format"):
+            apply_weight_format_override(cfg, "fp8")
+
+
+class TestResolve:
+    def test_config_value(self, model):
+        cfg, _ = model
+        assert swt.resolve(cfg) == "bf16"
+        assert swt.resolve(apply_weight_format_override(cfg, "bstc")) == "bstc"
+
+    def test_env_overrides_config(self, model, monkeypatch):
+        cfg, _ = model
+        monkeypatch.setenv(swt.ENV_VAR, "int8")
+        assert swt.resolve(cfg) == "int8"
+
+    def test_invalid_env_raises(self, model, monkeypatch):
+        cfg, _ = model
+        monkeypatch.setenv(swt.ENV_VAR, "fp4")
+        with pytest.raises(ValueError, match="weight_format"):
+            swt.resolve(cfg)
+
+    def test_validate_rejects_non_transformer_family(self):
+        cfg = apply_weight_format_override(
+            get_config("mamba2-1.3b", smoke=True), "int8")
+        with pytest.raises(ValueError, match="family"):
+            swt.validate(cfg)
+
+
+# --------------------------------------------------------------------------
+# record conversion
+# --------------------------------------------------------------------------
+
+
+class TestPrepareServeParams:
+    def test_bf16_leaves_params_untouched(self, model):
+        cfg, params = model
+        sp, plan = swt.prepare_serve_params(params, cfg, _layout(cfg), "bf16")
+        assert sp is params, "bf16 must be byte-for-byte the old path"
+        assert plan.fmt == "bf16"
+
+    def test_quantized_build_converts_projection_leaves(self, model):
+        cfg, params = model
+        sp, plan = swt.prepare_serve_params(
+            params, apply_weight_format_override(cfg, "int8"),
+            _layout(cfg), "int8")
+        assert swt.is_record(sp["layers"]["attn"]["wq"])
+        assert swt.is_record(sp["layers"]["mlp"]["down"])
+        # tied embeddings get an explicit lm_head record at serve time
+        assert swt.is_record(sp["lm_head"])
+        # ... but the raw leaves the prefill path reads are untouched
+        assert sp["embed"] is params["embed"]
+        assert plan.fmt == "int8"
+        swt.check_serve_params(sp, cfg, "int8")  # records pass the probe
+
+    def test_bstc_serves_identical_records_to_int8(self, model):
+        cfg, params = model
+        sp_i, _ = swt.prepare_serve_params(
+            params, apply_weight_format_override(cfg, "int8"),
+            _layout(cfg), "int8")
+        sp_b, _ = swt.prepare_serve_params(
+            params, apply_weight_format_override(cfg, "bstc"),
+            _layout(cfg), "bstc")
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)),
+            sp_i, sp_b,
+        )
+
+    def test_raw_params_rejected_by_quantized_build(self, model):
+        cfg, params = model
+        with pytest.raises(ValueError, match="raw weight leaves"):
+            swt.check_serve_params(params, cfg, "bstc")
+
+
+# --------------------------------------------------------------------------
+# serve parity: the scheduler end-to-end, pinned to the oracle
+# --------------------------------------------------------------------------
+
+
+class TestServeParity:
+    @pytest.mark.parametrize("fmt", ["int8", "bstc"])
+    def test_quantized_serve_matches_dense_reconstruction(self, model, fmt):
+        cfg, params = model
+        cfg_fmt = apply_weight_format_override(cfg, fmt)
+        _, got = _run_sched(cfg_fmt, params, _requests(cfg))
+
+        sp, _plan = swt.prepare_serve_params(params, cfg_fmt,
+                                             _layout(cfg_fmt), fmt)
+        oracle = _dequantized_tree(sp, layers._dtype(cfg.dtype))
+        _, want = _run_sched(cfg, params, _requests(cfg),
+                             serve_params_override=oracle)
+
+        for rid in got:
+            g, w = got[rid], want[rid]
+            assert g.generated == w.generated, (
+                f"{fmt} rid {rid}: greedy tokens diverge from the dense "
+                f"reconstruction oracle")
+            assert len(g.logit_rows) == len(w.logit_rows)
+            for t, (a, b) in enumerate(zip(g.logit_rows, w.logit_rows)):
+                assert np.array_equal(a, b), (
+                    f"{fmt} rid {rid} token {t}: quantized serve logits "
+                    f"not bit-identical to the dense reconstruction "
+                    f"(max |d| {np.max(np.abs(a - b))})")
+
+    def test_bstc_run_bit_identical_to_int8_run(self, model):
+        cfg, params = model
+        _, got_i = _run_sched(apply_weight_format_override(cfg, "int8"),
+                              params, _requests(cfg))
+        _, got_b = _run_sched(apply_weight_format_override(cfg, "bstc"),
+                              params, _requests(cfg))
+        for rid in got_i:
+            assert got_i[rid].generated == got_b[rid].generated
+            for a, b in zip(got_i[rid].logit_rows, got_b[rid].logit_rows):
+                assert np.array_equal(a, b)
+
+    def test_explicit_bf16_bit_identical_to_default(self, model):
+        cfg, params = model
+        _, got = _run_sched(apply_weight_format_override(cfg, "bf16"),
+                            params, _requests(cfg))
+        _, want = _run_sched(cfg, params, _requests(cfg))
+        for rid in got:
+            assert got[rid].generated == want[rid].generated
+            for a, b in zip(got[rid].logit_rows, want[rid].logit_rows):
+                assert np.array_equal(a, b)
+
+    def test_scheduler_env_override(self, model, monkeypatch):
+        cfg, params = model
+        monkeypatch.setenv(swt.ENV_VAR, "bstc")
+        sched = Scheduler(params, cfg, _layout(cfg))
+        assert sched.weight_format == "bstc"
+        assert swt.is_record(sched.serve_params["layers"]["attn"]["wq"])
+
+    def test_weight_read_counter_accounts_for_steps(self, model):
+        cfg, params = model
+        sched, _ = _run_sched(apply_weight_format_override(cfg, "bstc"),
+                              params, _requests(cfg))
+        wr = sched.stats()["weight_read"]
+        assert wr["weight_format"] == "bstc"
+        assert wr["decode_bytes"] == (
+            wr["decode_steps"] * wr["decode_bytes_per_step"])
+        assert wr["decode_bytes_per_step"] <= (
+            wr["decode_bf16_equiv_bytes_per_step"] / 2
+        ), "bstc coded weight traffic must be <= half the bf16 bytes"
+        assert 0.9 <= wr["measured_over_modeled"] <= 1.1
