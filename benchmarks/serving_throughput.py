@@ -5,6 +5,7 @@ plus the paged KV cache under a shared-system-prompt trace.
     PYTHONPATH=src python benchmarks/serving_throughput.py \\
         [--arch phi4-mini-3.8b] [--slots 2] [--requests 6] [--seed 0] \\
         [--kv-formats bf16,int8,bgpp] [--chunk-budget 8] [--quick] \\
+        [--server-sim] \\
         [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] [--mesh 2,4] \\
         [--decode-kernel auto|jnp|interpret|kernel] \\
@@ -60,6 +61,14 @@ the single-device occupancy the CI meshed launcher smoke is gated on.
              requests share a ``--shared-prefix``-token system prompt.
              Reports prefix-hit rate and peak resident KV bytes next to the
              slot layout's dense allocation for the same traffic.
+
+``--server-sim`` additionally replays the trace through the asyncio front
+door (``repro.serving.server.simulate_clients``: tiered rotating clients,
+every 3rd disconnecting after one token) on the paged layout and emits an
+informational ``serving_<fmt>_server`` row — cancels, sheds, preemptions,
+per-tier ITL.  The row is never gated against baselines (its wall clock
+includes event-loop overhead), but the per-step page-leak check is armed
+and a non-empty pool at the end fails the run.
 
 ``--quick`` runs one format with chunked+eager only and exits nonzero if
 chunked admission shows lower occupancy than eager OR a worse decode-tail
@@ -274,6 +283,13 @@ def main():
                          "weight_read counter)")
     ap.add_argument("--quick", action="store_true",
                     help="one format, chunked+eager only — the CI gate")
+    ap.add_argument("--server-sim", action="store_true",
+                    help="also replay the trace through the asyncio front "
+                         "door (tiered clients, every 3rd disconnecting) "
+                         "on the paged layout: an informational "
+                         "serving_<fmt>_server row, never baseline-gated, "
+                         "but the per-step page-leak check is armed and "
+                         "the pool must drain")
     ap.add_argument("--baseline", default=None,
                     help="committed BENCH JSON to gate regressions against "
                          f"(occupancy -{OCC_TOLERANCE} absolute, itl-p95 "
@@ -461,6 +477,59 @@ def main():
                 ok = False
             if r["resident_kv_bytes_peak"] >= r["slot_resident_kv_bytes"]:
                 ok = False
+
+    if args.server_sim:
+        # the same trace replayed through the asyncio front door
+        # (repro.serving.server.simulate_clients): tiered rotating clients,
+        # every 3rd hanging up after one token.  The wall clock includes
+        # event-loop overhead, so the row is informational — never gated
+        # against baselines — but the per-step PageAllocator.check leak
+        # gate is armed and the pool must end empty.
+        from repro.serving.server import simulate_clients
+        fmt = formats[0]
+        slayout = kvc.layout_for(cfg, args.slots, args.max_seq,
+                                 kv_format=fmt, layout="paged",
+                                 page_size=args.page_size)
+        rng = np.random.default_rng(args.seed)
+        sreqs = poisson_trace(rng, args.requests, cfg.vocab_size,
+                              args.max_new, arrival_rate=3.0,
+                              min_new=max(2, args.max_new // 3),
+                              max_prompt=min(23, args.max_seq - 2))
+        ssched = Scheduler(params, cfg, slayout, admission="chunked",
+                           chunk_budget=args.chunk_budget,
+                           **({"rules": rules} if rules is not None else {}))
+        t0 = time.perf_counter()
+        sv = simulate_clients(ssched, sreqs)
+        wall = time.perf_counter() - t0
+        tok_s = round(sv["decoded_tokens"] / wall, 1) if wall else 0.0
+        us = 1e6 / tok_s if tok_s else 0.0
+        tiers = ";".join(
+            f"{tier}_itl_p50={t['itl_s']['p50']}"
+            for tier, t in sorted(sv["tiers"].items()))
+        emit(f"serving_{fmt}_server", us,
+             f"occ={sv['mean_occupancy']:.3f};tok_s={tok_s}"
+             f";cancelled={sv['cancelled_requests']}"
+             f";shed={sv['shed_requests']}"
+             f";preemptions={sv['preemptions']}"
+             f";pages_in_use={sv['paged']['pages_in_use']}"
+             f";{tiers};flag=informational_not_gated")
+        results[f"{fmt}_server"] = {
+            "note": "async front door replay: informational, not gated",
+            "tokens_per_s": tok_s,
+            "mean_occupancy": sv["mean_occupancy"],
+            "cancelled_requests": sv["cancelled_requests"],
+            "shed_requests": sv["shed_requests"],
+            "preemptions": sv["preemptions"],
+            "tiers": sv["tiers"],
+            "disconnects": sum(c["disconnected"] for c in sv["clients"]),
+        }
+        print(f"# {fmt}: server sim cancelled "
+              f"{sv['cancelled_requests']}/{len(sreqs)}, preemptions "
+              f"{sv['preemptions']}, pool drained "
+              f"({sv['paged']['pages_in_use']} pages in use)")
+        if sv["paged"]["pages_in_use"] != 0:
+            print("# REGRESSION: server sim leaked pages")
+            ok = False
 
     # the tentpole's bytes ordering: bgpp's two-phase decode (bit-planes +
     # top-k full rows) must read WELL under the dense bf16 row — at least

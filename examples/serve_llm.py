@@ -5,8 +5,16 @@ bit-planar BGPP KV cache).
     PYTHONPATH=src python examples/serve_llm.py [--arch phi4-mini-3.8b]
         [--kv-format int8|bf16|bgpp] [--admission chunked|eager]
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16]
-        [--weight-format bf16|int8|bstc]
+        [--weight-format bf16|int8|bstc] [--server]
         [--chunk-budget 8] [--steps 24] [--batch 4] [--mesh 2,4]
+
+``--server`` swaps the offline replay for the asyncio front door
+(``repro.serving.server``) and showcases its three signature moves: a
+two-turn chat session whose second turn adopts the first turn's pinned
+KV pages through the sha1 prefix index (``--kv-layout paged``), an
+interactive arrival preempting a batch prompt's chunked prefill, and a
+client that disconnects mid-stream (slot evicted, pages freed, nobody
+else perturbed).
 
 Each request is admitted into its own slot of ONE live cache — by default
 through fixed-shape prefill chunks (``engine.ChunkedPrefill``, jitted once
@@ -38,6 +46,66 @@ from repro.serving.scheduler import Scheduler
 jax.config.update("jax_platform_name", "cpu")
 
 
+def run_server_demo(sched, cfg, rng):
+    """Drive the asyncio front door end to end: a two-turn chat session
+    (turn 2 adopts turn 1's pinned pages on paged layouts), an interactive
+    turn preempting a batch prompt's chunked prefill, and a mid-stream
+    client disconnect — with the per-step page-leak gate armed."""
+    import asyncio
+
+    from repro.serving.server import AsyncServer
+
+    def prompt(n):
+        return rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+
+    async def collect(stream):
+        return [t async for t in stream]
+
+    async def demo():
+        server = AsyncServer(sched, check_invariants=True)
+        pump = asyncio.ensure_future(server.run())
+        t1 = server.chat("demo", prompt(24), 6)
+        print(f"[server] chat turn 1 -> {await collect(t1)}")
+        # turn 2 races a batch client; the interactive tier preempts its
+        # chunked prefill, then turn 2's prompt head comes from the index
+        batch = server.submit(prompt(20), 6, priority="batch")
+        t2 = server.chat("demo", prompt(8), 6,
+                         arrival_step=sched.step_count + 1)
+        got2, gotb = await asyncio.gather(collect(t2), collect(batch))
+        print(f"[server] chat turn 2 -> {got2} (adopted "
+              f"{t2.request.prefix_reused_tokens} history tokens from the "
+              f"prefix index)")
+        print(f"[server] batch client -> {gotb} "
+              f"(prefill preempted {batch.request.preemptions}x)")
+        gone = server.submit(prompt(12), 32)
+        seen = []
+        async for tok in gone:
+            seen.append(tok)
+            if len(seen) == 2:
+                await gone.cancel()
+                break
+        print(f"[server] disconnecting client got {seen}, then hung up "
+              f"(cancelled while {gone.request.cancel_state})")
+        server.close_session("demo")
+        await server.drain()
+        server.close()
+        await pump
+        return server.stats()
+
+    stats = asyncio.run(demo())
+    print(f"[server] totals: finished={stats['finished_requests']} "
+          f"cancelled={stats['cancelled_requests']} "
+          f"preemptions={stats['preemptions']}")
+    for tier, t in stats["tiers"].items():
+        print(f"[server] tier {tier}: finished={t['finished']} "
+              f"cancelled={t['cancelled']} ttft_s p50={t['ttft_s']['p50']} "
+              f"itl_s p50={t['itl_s']['p50']}")
+    if "paged" in stats:
+        print(f"[server] paged: prefix hit rate "
+              f"{stats['paged']['prefix_hit_rate']:.3f}, pages in use "
+              f"{stats['paged']['pages_in_use']} (pool drained)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi4-mini-3.8b", choices=sorted(ARCH_REGISTRY))
@@ -62,6 +130,10 @@ def main():
                     help="serve-time weight numerics for decode projections "
                          "(bf16 raw default; int8/bstc quantized records "
                          "with weight_read pricing) (default: config's)")
+    ap.add_argument("--server", action="store_true",
+                    help="demo the asyncio front door instead: two-turn "
+                         "chat session (prefix-index reuse across turns), "
+                         "priority preemption, and a mid-stream disconnect")
     ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
@@ -100,6 +172,10 @@ def main():
     print(f"[serve] cache: {kvc.cache_bytes(sched.cache)/1e6:.2f} MB "
           f"({len(layout.global_layers)} global / "
           f"{len(layout.local_layers)} local layers)")
+
+    if args.server:
+        run_server_demo(sched, cfg, rng)
+        return
 
     # batched "requests": random prompts of varying length (no tokenizer in
     # the container); +1 because admission itself samples the first token.

@@ -7,6 +7,7 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
         [--weight-format bf16|int8|bstc] \\
+        [--server] [--disconnect-every 3] [--disconnect-after 1] \\
         [--trace-out trace.json] [--mesh 2,4 | --data 1 --model 1]
 
 Requests arrive on a Poisson-ish trace with distinct prompt lengths and
@@ -31,6 +32,16 @@ bit-for-bit raw default.  ``--trace-out`` dumps
 per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
 throughput as JSON so runs are reproducible (``--seed``) and comparable
 across PRs.
+
+``--server`` routes the same trace through the asyncio front door
+(``repro.serving.server``) with simulated clients instead of the offline
+replay loop: tiers rotate interactive/batch (interactive preempts batch
+chunked prefills), and every ``--disconnect-every``-th client hangs up
+after ``--disconnect-after`` streamed tokens — a mid-flight cancellation
+that must evict the slot and free its pages.  The printed stats grow
+cancellation / preemption / per-tier TTFT+ITL lines (the async-server CI
+smoke greps them), and the per-step ``PageAllocator.check()`` leak gate
+runs throughout.
 """
 
 from __future__ import annotations
@@ -105,6 +116,17 @@ def main():
                     help="mean inter-arrival gap in decode steps")
     ap.add_argument("--seed", type=int, default=0,
                     help="request-trace RNG seed (reproducible runs)")
+    ap.add_argument("--server", action="store_true",
+                    help="drive the asyncio front door with simulated "
+                         "tiered streaming clients (interactive/batch "
+                         "rotation, mid-stream disconnects) instead of the "
+                         "offline replay loop")
+    ap.add_argument("--disconnect-every", type=int, default=3,
+                    help="--server: every Nth client disconnects mid-stream "
+                         "(0 disables)")
+    ap.add_argument("--disconnect-after", type=int, default=1,
+                    help="--server: disconnecting clients hang up after "
+                         "this many streamed tokens")
     ap.add_argument("--trace-out", default=None,
                     help="write per-request latency/throughput JSON here")
     ap.add_argument("--data", type=int, default=1)
@@ -141,25 +163,37 @@ def main():
                       prefill_kw=dict(block_q=16, block_k=32))
     max_prompt = min(23, args.max_seq - 2 - args.shared_prefix)
     assert max_prompt >= 1, "--shared-prefix leaves no room for prompts"
-    for req in poisson_trace(rng, args.requests, cfg.vocab_size,
-                             args.max_new, args.arrival_rate,
-                             max_prompt=max_prompt,
-                             shared_prefix=args.shared_prefix):
-        sched.submit(req)
+    reqs = poisson_trace(rng, args.requests, cfg.vocab_size,
+                         args.max_new, args.arrival_rate,
+                         max_prompt=max_prompt,
+                         shared_prefix=args.shared_prefix)
 
     t0 = time.perf_counter()
-    done = 0
-    with mesh:
-        while sched.num_pending:
-            sched.step()
-            if len(sched.finished) != done:
-                done = len(sched.finished)
-                print(f"[serve] {done}/{args.requests} requests "
-                      f"({sched.decoded_tokens} tokens, "
-                      f"step {sched.step_count})")
-    dt = time.perf_counter() - t0
-
-    stats = sched.stats(dt)
+    if args.server:
+        from repro.serving.server import simulate_clients
+        with mesh:
+            stats = simulate_clients(
+                sched, reqs, disconnect_every=args.disconnect_every,
+                disconnect_after=args.disconnect_after,
+            )
+        dt = time.perf_counter() - t0
+        stats["wall_s"] = round(dt, 3)
+        stats["tokens_per_s"] = round(stats["decoded_tokens"] / dt, 2) \
+            if dt > 0 else None
+    else:
+        for req in reqs:
+            sched.submit(req)
+        done = 0
+        with mesh:
+            while sched.num_pending:
+                sched.step()
+                if len(sched.finished) != done:
+                    done = len(sched.finished)
+                    print(f"[serve] {done}/{args.requests} requests "
+                          f"({sched.decoded_tokens} tokens, "
+                          f"step {sched.step_count})")
+        dt = time.perf_counter() - t0
+        stats = sched.stats(dt)
     print(f"[serve] arch={cfg.name} kv={args.kv_format} "
           f"admission={args.admission}: "
           f"{stats['finished_requests']} requests, "
@@ -170,6 +204,20 @@ def main():
           f"p95={stats['ttft_s']['p95']}  "
           f"itl_s p50={stats['itl_s']['p50']} p95={stats['itl_s']['p95']}  "
           f"max prefill tokens/step={stats['max_prefill_tokens_per_step']}")
+    if args.server:
+        pages = (f" pages_in_use={stats['paged']['pages_in_use']}"
+                 if "paged" in stats else "")
+        print(f"[serve] server: cancelled={stats['cancelled_requests']} "
+              f"shed={stats['shed_requests']} "
+              f"preemptions={stats['preemptions']} "
+              f"disconnects="
+              f"{sum(c['disconnected'] for c in stats['clients'])}{pages}")
+        for tier, t in stats["tiers"].items():
+            print(f"[serve] tier {tier}: finished={t['finished']} "
+                  f"cancelled={t['cancelled']} shed={t['shed']} "
+                  f"preemptions={t['preemptions']} "
+                  f"ttft_s p50={t['ttft_s']['p50']} "
+                  f"itl_s p50={t['itl_s']['p50']} p95={t['itl_s']['p95']}")
     kv = stats["kv_read"]
     print(f"[serve] kv read: {kv['decode_bytes']/1e6:.2f} MB decode + "
           f"{kv['prefill_bytes']/1e6:.2f} MB prefill; "
@@ -220,6 +268,9 @@ def main():
             "bgpp_keep_ratio": cfg.mcbp.bgpp_keep_ratio,
             "decode_kernel": cfg.mcbp.decode_kernel,
             "weight_format": sched.weight_format,
+            "server": args.server,
+            "disconnect_every": args.disconnect_every,
+            "disconnect_after": args.disconnect_after,
         }
         with open(args.trace_out, "w") as f:
             json.dump(stats, f, indent=2)

@@ -9,5 +9,6 @@ from repro.serving import (  # noqa: F401
     paging,
     request,
     scheduler,
+    server,
     weights,
 )

@@ -27,6 +27,13 @@ decode write, ``register_prefix`` after chunks land, ``lookup_prefix`` +
 ``adopt_prefix`` at admission, ``release_slot`` at eviction (the returned
 freed ids are scrubbed on device via :func:`repro.serving.kv_cache
 .zero_pages` — eviction only *frees* a page when its refcount hits zero).
+
+Pages can additionally be **pinned** (``pin_pages`` / ``unpin_pages``): a
+pin is a refcount held by no slot — the async server's chat sessions use
+it to keep a finished turn's prompt+history pages (and their prefix-index
+entries) resident between turns, so the next turn's prompt adopts them
+instead of re-prefilling.  ``check()`` accounts pins explicitly: table
+reachability + pins must equal the refcount exactly.
 """
 
 from __future__ import annotations
@@ -53,6 +60,9 @@ class PageAllocator:
         )
         self.refcount = np.zeros(self.num_pages, np.int32)
         self.generation = np.zeros(self.num_pages, np.int64)
+        # refcounts held by pins (session keep-alives) rather than by a
+        # slot's table row; check() reconciles them separately
+        self.pins = np.zeros(self.num_pages, np.int32)
         # pop() hands out low ids first (cosmetic, but makes traces stable)
         self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
         # digest -> (prefix tokens, page ids, generations at registration)
@@ -203,24 +213,59 @@ class PageAllocator:
             self.dirty = True
 
     # ------------------------------------------------------------------
+    # pins (session keep-alives)
+    # ------------------------------------------------------------------
+
+    def pin_pages(self, ids) -> None:
+        """Hold ``ids`` resident without a slot mapping (refcount++ each).
+        Every page must currently be live — a pin extends residency, it
+        cannot resurrect a freed page."""
+        for p in ids:
+            p = int(p)
+            assert self.refcount[p] > 0, f"cannot pin freed page {p}"
+            self.refcount[p] += 1
+            self.pins[p] += 1
+
+    def unpin_pages(self, ids) -> List[int]:
+        """Drop pins on ``ids``; pages whose refcount hits zero are freed
+        (generation bumped, prefix entries pruned) and returned for device
+        zeroing — exactly ``release_slot``'s free path, minus the table."""
+        freed = []
+        for p in ids:
+            p = int(p)
+            assert self.pins[p] > 0, f"page {p} is not pinned"
+            self.pins[p] -= 1
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self.generation[p] += 1
+                self._free.append(p)
+                freed.append(p)
+                for d in self._page_digests.pop(p, ()):
+                    self._prefix.pop(d, None)
+        return freed
+
+    # ------------------------------------------------------------------
     # accounting / invariants
     # ------------------------------------------------------------------
 
     def check(self) -> None:
         """Assert the bookkeeping invariants the property tests lean on:
-        refcounts == table reachability, free list disjoint from the table
-        and duplicate-free, every page accounted for."""
+        refcounts == table reachability + pins, free list disjoint from
+        the table and duplicate-free, every page accounted for."""
         counts = np.zeros(self.num_pages, np.int64)
         for p in self.table.ravel():
             if p >= 0:
                 counts[p] += 1
-        assert np.array_equal(counts, self.refcount), (
-            f"refcount drift: table says {counts.nonzero()[0]}, "
+        assert np.array_equal(counts + self.pins, self.refcount), (
+            f"refcount drift: table+pins say "
+            f"{(counts + self.pins).nonzero()[0]}, "
             f"refcount says {self.refcount.nonzero()[0]}"
         )
+        assert np.all(self.pins >= 0), "negative pin count"
         free = set(self._free)
         assert len(free) == len(self._free), "free list holds duplicates"
         mapped = {int(p) for p in self.table.ravel() if p >= 0}
+        mapped |= {int(p) for p in np.nonzero(self.pins)[0]}
         assert not (free & mapped), f"pages both free and mapped: {free & mapped}"
         assert len(free) + len(mapped) == self.num_pages, (
             "pages leaked: every page must be exactly one of free/mapped"

@@ -6,25 +6,54 @@ lifecycle.  A :class:`Slot` is one batch index of the live cache; its state
 machine is
 
     EMPTY -> PREFILLING -> DECODING -> DONE -> (evicted) EMPTY
+                  |             |
+                  +-- cancel ---+--> CANCELLED -> (evicted) EMPTY
 
 With chunked admission PREFILLING is a real multi-step state: the slot
 stays in it while the scheduler feeds the prompt through fixed-shape
 prefill chunks between batched decode steps, ``Slot.prefill_pos`` tracking
 how many prompt tokens have been consumed.  Eager admission passes through
 PREFILLING synchronously inside one ``admit()`` call.
+
+``Scheduler.cancel(rid)`` can pull a request out at ANY lifecycle state —
+still queued, mid-chunked-prefill, or decoding — releasing its pages and
+recording only the bookkeeping its state actually produced (a PREFILLING
+cancel has no first token, so no TTFT/ITL rows).  Requests also carry a
+``priority`` tier (``interactive`` before ``batch``): the admission queue
+is priority-ordered FIFO, and the chunked-prefill advance always picks the
+highest-priority admitting slot, preempting an in-progress lower-tier
+prefill (its ``prefill_pos`` freezes; it resumes at the same offset once
+nothing above it is admitting).  ``deadline_steps`` is the SLO-aware
+admission knob: a request still queued that many steps after arrival is
+shed instead of admitted.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
+# SLO tiers, best first: the admission queue and the chunked-prefill
+# advance order both sort by PRIORITIES.index(request.priority)
+PRIORITIES = ("interactive", "batch")
+
+
+def priority_rank(priority: str) -> int:
+    """Admission rank of a tier name (lower admits/advances first)."""
+    try:
+        return PRIORITIES.index(priority)
+    except ValueError:
+        raise ValueError(
+            f"unknown priority {priority!r}: expected one of {PRIORITIES}"
+        ) from None
+
 
 class SlotState(enum.Enum):
-    """Slot lifecycle states (EMPTY -> PREFILLING -> DECODING -> DONE)."""
+    """Slot lifecycle states (EMPTY -> PREFILLING -> DECODING -> DONE,
+    with cancellation folding any live state back to EMPTY)."""
 
     EMPTY = "empty"
     PREFILLING = "prefilling"
@@ -46,6 +75,21 @@ class Request:
     # produced/recorded) — the serving oracles compare quantized formats
     # like-for-like per position without greedy compounding
     forced_tokens: Optional[np.ndarray] = None
+    # SLO class: admission order and the per-tier stats() bucket
+    priority: str = "interactive"
+    # SLO-aware admission: shed (cancel unstarted) if still queued this
+    # many steps after arrival.  None = wait forever.
+    deadline_steps: Optional[int] = None
+    # streaming hooks (the async server's transport): on_token fires once
+    # per generated token, on_finish exactly once per request — at DONE
+    # *or* at cancellation/shedding (check ``cancelled``)
+    on_token: Optional[Callable[["Request", int], None]] = None
+    on_finish: Optional[Callable[["Request"], None]] = None
+    # chat sessions: at DONE, pin the page-aligned prefix of this
+    # request's written history (prompt + generated KV) so the next turn's
+    # prompt can adopt it from the sha1 prefix index (paged, global-only
+    # layouts; the pin ids land in ``pinned_pages``)
+    keep_prefix_resident: bool = False
 
     # --- filled in by the scheduler -----------------------------------
     generated: List[int] = dataclasses.field(default_factory=list)
@@ -62,6 +106,20 @@ class Request:
     token_times: List[float] = dataclasses.field(default_factory=list)
     # per-token logits rows (np.float32 (V,)), when Scheduler(record_logits=True)
     logit_rows: Optional[List[np.ndarray]] = None
+    # cancellation bookkeeping (Scheduler.cancel / deadline shedding)
+    cancelled: bool = False
+    shed: bool = False  # cancelled by the admission deadline, never ran
+    cancel_step: int = -1
+    cancel_time: float = -1.0
+    # lifecycle state at the moment of cancellation ("queued" /
+    # "prefilling" / "decoding") — the fuzz oracle's coverage audit
+    cancel_state: Optional[str] = None
+    # times this request's in-progress chunked prefill lost the budget to
+    # a higher-priority admitting slot
+    preemptions: int = 0
+    # page ids pinned at DONE for keep_prefix_resident (release with
+    # Scheduler.unpin_pages when the session closes)
+    pinned_pages: tuple = ()
 
     @property
     def prompt_len(self) -> int:
@@ -93,6 +151,8 @@ class Request:
         gaps = self.itl_gaps_s()
         return {
             "rid": self.rid,
+            "priority": self.priority,
+            "preemptions": self.preemptions,
             "prompt_len": self.prompt_len,
             "prefix_reused_tokens": self.prefix_reused_tokens,
             "new_tokens": len(self.generated),
@@ -108,6 +168,19 @@ class Request:
             "latency_s": round(self.finish_time - self.submit_time, 6),
             "tokens_per_s": round(len(self.generated) / wall, 3)
             if wall > 0 else None,
+        }
+
+    def cancel_record(self) -> dict:
+        """JSON-serializable trace entry for a cancelled/shed request."""
+        return {
+            "rid": self.rid,
+            "priority": self.priority,
+            "prompt_len": self.prompt_len,
+            "tokens_before_cancel": len(self.generated),
+            "cancel_state": self.cancel_state,
+            "shed": self.shed,
+            "arrival_step": self.arrival_step,
+            "cancel_step": self.cancel_step,
         }
 
 

@@ -32,6 +32,30 @@ positions a reused slot would need); everything else about paged serving —
 including every logit — is bit-identical to the slot layout, which is how
 the fuzz oracle checks it.
 
+The front-door hooks (``repro.serving.server`` is the asyncio transport
+over them):
+
+  * ``cancel(rid)`` pulls a request out at ANY lifecycle state — queued
+    (dequeue), PREFILLING (state-aware eviction: pages freed, no bogus
+    TTFT/ITL rows recorded), or DECODING (eviction mid-stream).  Survivor
+    slots are untouched: eviction is the same logical evict + page decref
+    the DONE path uses, which the fuzz oracle pins bit-exact.
+  * ``Request.priority`` tiers (``interactive`` > ``batch``): the
+    admission queue is priority-ordered FIFO, and the chunked-prefill
+    advance picks the highest-priority admitting slot each step — an
+    interactive arrival preempts an in-progress batch prefill's chunk
+    budget (the batch slot's ``prefill_pos`` freezes; it resumes at that
+    exact offset when nothing above it is admitting).  Decodes already
+    running are never killed by priority.
+  * ``Request.deadline_steps``: SLO-aware admission — a request still
+    queued that many steps past arrival is shed (cancelled unstarted)
+    instead of admitted late.
+  * ``Request.on_token`` / ``on_finish`` stream tokens and completion to
+    the caller per scheduler step (the server bridges them onto asyncio
+    queues); ``Request.keep_prefix_resident`` pins the finished turn's
+    page-aligned history so a chat session's next turn hits the prefix
+    index (release with ``unpin_pages``).
+
 Greedy sampling by default; pass ``sample_fn`` for anything richer, or set
 ``Request.forced_tokens`` to teacher-force a response (serving oracles).
 The scheduler is deliberately host-side python around jitted device steps —
@@ -55,7 +79,7 @@ from repro.serving import engine, kv_cache as kvc
 from repro.serving import sharded as shd
 from repro.serving import weights as swt
 from repro.serving.paging import PageAllocator
-from repro.serving.request import Request, Slot, SlotState
+from repro.serving.request import (Request, Slot, SlotState, priority_rank)
 
 
 def greedy_sample(logits: np.ndarray) -> np.ndarray:
@@ -171,6 +195,11 @@ class Scheduler:
 
         self.step_count = 0
         self.finished: List[Request] = []
+        self.cancelled: List[Request] = []  # cancel() + deadline sheds
+        self.preemptions = 0  # chunk budgets reclaimed by a higher tier
+        # slot index whose prefill the advance loop worked on last step —
+        # the reference point for counting budget preemptions
+        self._advancing: Optional[int] = None
         self.occupancy: List[float] = []  # busy slots / slots, per step
         self.decoded_tokens = 0
         # KV-read accounting: host-side mirrors of the jitted steps' static
@@ -289,11 +318,29 @@ class Scheduler:
         return len(self.queue) + sum(1 for s in self.slots if s.live)
 
     def _next_arrived(self) -> Optional[Request]:
+        """Highest-priority arrived request, FIFO within a tier."""
+        best = None
         for i, req in enumerate(self.queue):
-            if req.arrival_step <= self.step_count:
-                del self.queue[i]
-                return req
-        return None
+            if req.arrival_step > self.step_count:
+                continue
+            if best is None or (priority_rank(req.priority)
+                                < priority_rank(best[1].priority)):
+                best = (i, req)
+        if best is None:
+            return None
+        del self.queue[best[0]]
+        return best[1]
+
+    def _shed_expired(self) -> None:
+        """SLO-aware admission: cancel (shed) queued requests whose
+        admission deadline has passed — serving them late would only burn
+        chunk budget that on-SLO requests need."""
+        expired = [r for r in self.queue
+                   if r.deadline_steps is not None
+                   and self.step_count - r.arrival_step > r.deadline_steps]
+        for req in expired:
+            self.queue.remove(req)
+            self._record_cancel(req, "queued", shed=True)
 
     def _pick_token(self, req: Request, logits_row: np.ndarray) -> int:
         """Next response token: forced (teacher-forced oracles) or sampled."""
@@ -318,6 +365,8 @@ class Scheduler:
         req.token_times.append(now)
         self.tokens[slot.index, 0] = first
         slot.state = SlotState.DECODING
+        if req.on_token is not None:
+            req.on_token(req, first)
         if self._hit_limit(slot, req):
             self._finish(slot)
 
@@ -370,8 +419,24 @@ class Scheduler:
             self.prompt_tokens_admitted += req.prompt_len
         admitting = [s for s in self.slots if s.state is SlotState.PREFILLING]
         if not admitting:
+            self._advancing = None
             return 0
-        slot = min(admitting, key=lambda s: (s.request.admitted_step, s.index))
+        # highest tier first, then oldest admission: an interactive
+        # arrival preempts an in-progress batch prefill's chunk budget
+        slot = min(admitting, key=lambda s: (
+            priority_rank(s.request.priority), s.request.admitted_step,
+            s.index,
+        ))
+        prev = self._advancing
+        if prev is not None and prev != slot.index:
+            ps = self.slots[prev]
+            if (ps.state is SlotState.PREFILLING
+                    and priority_rank(ps.request.priority)
+                    > priority_rank(slot.request.priority)):
+                # the budget that would have advanced ps goes to slot;
+                # ps.prefill_pos freezes and resumes at the same offset
+                ps.request.preemptions += 1
+                self.preemptions += 1
         req = slot.request
         if slot.prefill_pos == 0:
             # first advance of this slot: safe point for prefix adoption
@@ -403,6 +468,9 @@ class Scheduler:
                                        slot.prefill_pos)
         if slot.prefill_pos >= req.prompt_len:
             self._emit_first_token(slot, np.asarray(logits[0, n - 1], np.float32))
+            self._advancing = None
+        else:
+            self._advancing = slot.index
         return spent
 
     # ------------------------------------------------------------------
@@ -420,24 +488,123 @@ class Scheduler:
         return (req.eos_id is not None and bool(req.generated)
                 and req.generated[-1] == req.eos_id)
 
+    def _evict(self, slot: Slot) -> None:
+        """State-agnostic slot release, safe at ANY lifecycle state:
+        decref the slot's pages (zeroing on device only those no sharer
+        or pin still holds), reset the token feed, return the row to
+        EMPTY.  Bookkeeping that depends on how far the request got —
+        finish timestamps, TTFT/ITL rows — is the caller's job: the DONE
+        path records them, the cancel path records only cancel fields (a
+        PREFILLING cancel has produced no tokens, so writing the DONE
+        fields would fabricate latency rows).
+
+        Eviction of the KV row itself is logical only: the physical reset
+        (an O(cache) copy) happens once, at the next admission — both
+        admission paths always reset_slot first, and per-slot valid masks
+        keep the stale row invisible to live neighbors in the meantime."""
+        self._release_pages(slot.index)
+        self.tokens[slot.index, 0] = 0
+        if self._advancing == slot.index:
+            # the in-progress prefill reference must not dangle into a
+            # row that now holds a different (or no) request
+            self._advancing = None
+        slot.request = None
+        slot.prefill_pos = 0
+        slot.state = SlotState.EMPTY
+
     def _finish(self, slot: Slot) -> None:
         req = slot.request
         req.finished_step = self.step_count
         req.finish_time = time.perf_counter()
         slot.state = SlotState.DONE
         self.finished.append(req)
-        # paged eviction is physical for the pool: decref every mapped
-        # page, zero + free the ones no sharer still holds
-        self._release_pages(slot.index)
-        # eviction is logical only: the physical row reset (an O(cache)
-        # copy) happens once, at the next admission — both admission paths
-        # always reset_slot first, and per-slot valid masks keep the
-        # stale row invisible to live neighbors in the meantime.  Call
-        # kv_cache.reset_slot yourself to scrub a row eagerly.
-        self.tokens[slot.index, 0] = 0
-        slot.request = None
-        slot.prefill_pos = 0
-        slot.state = SlotState.EMPTY
+        # chat sessions: pin the written history's page-aligned prefix
+        # BEFORE eviction decrefs it, so the next turn finds it resident
+        self._pin_history(slot, req)
+        self._evict(slot)
+        if req.on_finish is not None:
+            req.on_finish(req)
+
+    def _record_cancel(self, req: Request, state: str,
+                       shed: bool = False) -> None:
+        req.cancelled = True
+        req.shed = shed
+        req.cancel_state = state
+        req.cancel_step = self.step_count
+        req.cancel_time = time.perf_counter()
+        self.cancelled.append(req)
+        if req.on_finish is not None:
+            req.on_finish(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel request ``rid`` wherever it is in its lifecycle.
+
+        * still queued — removed from the admission queue;
+        * PREFILLING — evicted mid-chunked-prefill: pages mapped so far
+          (including any adopted prefix pages) are decrefed, shared pages
+          survive for their other holders, and NO first-token/ITL
+          bookkeeping is recorded (the state-aware-eviction contract);
+        * DECODING — evicted mid-stream, same page discipline.
+
+        Safe to call between scheduler steps at any time (the async
+        server calls it on client disconnect).  Returns True if the
+        request was found live/queued, False if it already finished,
+        was already cancelled, or is unknown.
+        """
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self._record_cancel(req, "queued")
+                return True
+        for slot in self.slots:
+            if slot.live and slot.request.rid == rid:
+                req = slot.request
+                state = ("prefilling" if slot.state is SlotState.PREFILLING
+                         else "decoding")
+                self._evict(slot)
+                self._record_cancel(req, state)
+                return True
+        return False
+
+    def _pin_history(self, slot: Slot, req: Request) -> None:
+        """``keep_prefix_resident``: index + pin the page-aligned prefix
+        of this request's *written* history (prompt + generated tokens
+        whose KV landed — everything but the final sampled token) so a
+        chat session's next turn can adopt it via the prefix index.  The
+        pin ids land in ``req.pinned_pages``; release them with
+        :meth:`unpin_pages` when the session moves on."""
+        if (self.pager is None or self.layout.local_layers
+                or not req.keep_prefix_resident):
+            return
+        written = req.prompt_len + len(req.generated) - 1
+        hist = np.concatenate([
+            np.asarray(req.prompt, np.int32),
+            np.asarray(req.generated[:-1], np.int32),
+        ])
+        self.pager.register_prefix(slot.index, hist, written)
+        npages = written // self.layout.page_size
+        ids = tuple(int(p) for p in self.pager.table[slot.index, :npages]
+                    if p >= 0)
+        if npages > 0 and len(ids) == npages:
+            self.pager.pin_pages(ids)
+            req.pinned_pages = ids
+
+    def unpin_pages(self, ids) -> None:
+        """Release session pins taken by ``keep_prefix_resident``: decref
+        each page, zero + free (on device) the ones no slot or other pin
+        still holds — the same hygiene eviction applies."""
+        if self.pager is None or not ids:
+            return
+        freed = self.pager.unpin_pages(ids)
+        cap = self.layout.pages_per_slot
+        for lo in range(0, len(freed), cap):
+            buf = np.full(cap, -1, np.int32)
+            chunk = freed[lo:lo + cap]
+            buf[:len(chunk)] = chunk
+            self.cache["global"] = self._zero_pages(
+                self.cache["global"], jnp.asarray(buf)
+            )
+        self._sync_pages()
 
     def step(self) -> bool:
         """Admit/advance prefill, run one batched decode step, harvest,
@@ -446,6 +613,7 @@ class Scheduler:
         Returns False when there was nothing to do (no live slot and no
         admissible request) — the caller's idle/termination signal.
         """
+        self._shed_expired()
         if self.admission == "chunked":
             spent = self._advance_admission()
         else:
@@ -483,6 +651,8 @@ class Scheduler:
             req.generated.append(tok)
             req.token_times.append(now)
             self.tokens[slot.index, 0] = tok
+            if req.on_token is not None:
+                req.on_token(req, tok)
             if self._hit_limit(slot, req):
                 self._finish(slot)
         return True
@@ -496,6 +666,35 @@ class Scheduler:
                 break
             self.step()
         return self.stats(time.perf_counter() - t0)
+
+    def _tier_stats(self) -> Dict[str, Dict]:
+        """Per-priority-tier SLO columns: finished/cancelled counts,
+        preemptions suffered, and TTFT/ITL percentiles — the numbers an
+        SLO dashboard keys on (interactive tail vs batch tail)."""
+        tiers: Dict[str, Dict] = {}
+        present = ({r.priority for r in self.finished}
+                   | {r.priority for r in self.cancelled})
+        for tier in sorted(present, key=priority_rank):
+            fin = [r for r in self.finished if r.priority == tier]
+            gaps = np.concatenate(
+                [r.itl_gaps_s() for r in fin]
+            ) if fin else np.asarray([])
+            tiers[tier] = {
+                "finished": len(fin),
+                "cancelled": sum(
+                    1 for r in self.cancelled if r.priority == tier
+                ),
+                "shed": sum(
+                    1 for r in self.cancelled
+                    if r.priority == tier and r.shed
+                ),
+                "preemptions": sum(r.preemptions for r in fin),
+                "ttft_s": _percentiles(
+                    r.ttft_s for r in fin if r.first_token_time > 0
+                ),
+                "itl_s": _percentiles(gaps),
+            }
+        return tiers
 
     def stats(self, wall_s: Optional[float] = None) -> Dict:
         """Aggregate serving metrics: throughput/occupancy, TTFT/ITL
@@ -523,6 +722,12 @@ class Scheduler:
             ),
             "itl_s": _percentiles(gaps),
             "requests": [r.trace_record() for r in self.finished],
+            # front-door columns: cancellation / preemption / per-tier SLO
+            "cancelled_requests": len(self.cancelled),
+            "shed_requests": sum(1 for r in self.cancelled if r.shed),
+            "preemptions": self.preemptions,
+            "tiers": self._tier_stats(),
+            "cancelled": [r.cancel_record() for r in self.cancelled],
         }
         dr = self._decode_read
         out["kv_read"] = {

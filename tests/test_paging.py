@@ -119,6 +119,68 @@ def test_pool_exhaustion_is_loud():
 
 
 # --------------------------------------------------------------------------
+# pins: residency held by no slot (chat-session keep-alives)
+# --------------------------------------------------------------------------
+
+
+def test_pin_survives_slot_release():
+    """A pinned prefix outlives its slot: release_slot decrefs but the pin
+    keeps the pages (and their index entries) resident and adoptable."""
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    prompt = np.arange(16, dtype=np.int32)
+    pager.ensure_range(0, 0, 16)
+    pager.register_prefix(0, prompt, upto=16)
+    ids = [int(p) for p in pager.table[0, :2]]
+    pager.pin_pages(ids)
+    pager.check()
+    assert pager.release_slot(0) == []  # pin holds them: nothing freed
+    pager.check()
+    assert pager.pages_in_use == 0 or all(pager.refcount[p] == 1
+                                          for p in ids)
+    # still resident + still indexed: a longer prompt adopts them
+    longer = np.concatenate([prompt, prompt]).astype(np.int32)
+    n, hit = pager.lookup_prefix(longer)
+    assert n == 16 and list(hit) == ids
+    pager.adopt_prefix(1, hit)
+    pager.check()
+    # sharer releases, then the pin: only the unpin frees
+    assert pager.release_slot(1) == []
+    assert sorted(pager.unpin_pages(ids)) == sorted(ids)
+    pager.check()
+    assert pager.lookup_prefix(longer) == (0, ()), "unpin left the index"
+
+
+def test_unpin_is_exact_inverse_and_loud():
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    pager.ensure_range(0, 0, 8)
+    (p,) = [int(q) for q in pager.table[0, :1]]
+    pager.pin_pages([p])
+    pager.pin_pages([p])  # pins stack like refcounts
+    pager.check()
+    assert pager.refcount[p] == 3 and pager.pins[p] == 2
+    assert pager.unpin_pages([p]) == []
+    pager.release_slot(0)
+    pager.check()
+    assert pager.unpin_pages([p]) == [p]  # last holder frees
+    pager.check()
+    with pytest.raises(AssertionError, match="not pinned"):
+        pager.unpin_pages([p])
+    with pytest.raises(AssertionError, match="freed"):
+        pager.pin_pages([p])  # pins extend residency, never resurrect
+
+
+def test_check_catches_pin_refcount_drift():
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    pager.ensure_range(0, 0, 8)
+    pager.pins[int(pager.table[0, 0])] += 1  # pin without the refcount
+    with pytest.raises(AssertionError, match="refcount drift"):
+        pager.check()
+
+
+# --------------------------------------------------------------------------
 # freed pages are re-zeroed across every store leaf
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,356 @@
+"""Async streaming front door: AsyncServer / ChatSession / TCPFrontDoor.
+
+Stdlib-only asyncio tests (``asyncio.run`` inside sync test functions — no
+pytest-asyncio in the pinned environment).  Each test drives a real
+scheduler on the phi4 smoke model with the per-step ``PageAllocator.check``
+leak gate armed, so every streaming/cancel/session path is also a pool
+hygiene proof.
+"""
+
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.serving import kv_cache as kvc
+from repro.serving.scheduler import Scheduler
+from repro.serving.server import AsyncServer, TCPFrontDoor, simulate_clients
+from repro.serving.request import poisson_trace
+
+jax.config.update("jax_platform_name", "cpu")
+
+MAX_SEQ = 64
+PAGE_SIZE = 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    params, _ = model_zoo.init(jax.random.key(0), cfg)
+    return cfg, params
+
+
+_SHARED = {}
+
+
+def make_sched(cfg, params, slots=2):
+    layout = kvc.layout_for(cfg, slots, MAX_SEQ, kv_format="bf16",
+                            layout="paged", page_size=PAGE_SIZE)
+    sched = Scheduler(params, cfg, layout, admission="chunked",
+                      chunk_budget=6, shared_fns=_SHARED.get(slots))
+    _SHARED[slots] = sched.shared_fns()
+    return sched
+
+
+def prompt_of(rng, cfg, n):
+    return rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def drive(sched, body):
+    """Run ``body(server)`` against a pumped AsyncServer; close + drain on
+    the way out and verify the page pool ended empty."""
+
+    async def main():
+        server = AsyncServer(sched, check_invariants=True)
+        pump = asyncio.ensure_future(server.run())
+        try:
+            return await body(server)
+        finally:
+            server.close()
+            await pump
+            sched.pager.check()
+            assert sched.pager.pages_in_use == 0, "server leaked pages"
+
+    return asyncio.run(main())
+
+
+class TestStreaming:
+    def test_tokens_stream_incrementally(self, served):
+        cfg, params = served
+        rng = np.random.default_rng(0)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            stream = server.submit(prompt_of(rng, cfg, 9), 4)
+            toks = [t async for t in stream]
+            assert len(toks) == 4
+            req = stream.request
+            assert req is not None and not req.cancelled
+            assert toks == req.generated  # stream IS the generated sequence
+            return server.stats()
+
+        stats = drive(sched, body)
+        assert stats["finished_requests"] == 1
+        assert stats["server"]["open_streams"] == 0
+
+    def test_two_streams_interleave(self, served):
+        cfg, params = served
+        rng = np.random.default_rng(1)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            s1 = server.submit(prompt_of(rng, cfg, 7), 5)
+            s2 = server.submit(prompt_of(rng, cfg, 11), 3)
+            r1, r2 = await asyncio.gather(
+                asyncio.ensure_future(_collect(s1)),
+                asyncio.ensure_future(_collect(s2)),
+            )
+            assert len(r1) == 5 and len(r2) == 3
+
+        drive(sched, body)
+
+    def test_invalid_priority_rejected_at_submit(self, served):
+        cfg, params = served
+        rng = np.random.default_rng(2)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            with pytest.raises(ValueError, match="priority"):
+                server.submit(prompt_of(rng, cfg, 5), 2, priority="vip")
+
+        drive(sched, body)
+
+
+async def _collect(stream):
+    return [t async for t in stream]
+
+
+class TestCancellation:
+    def test_cancel_mid_stream_spares_neighbor(self, served):
+        """Disconnect one client after two tokens; the other stream must
+        finish its full budget and the pool must drain."""
+        cfg, params = served
+        rng = np.random.default_rng(3)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            victim = server.submit(prompt_of(rng, cfg, 9), 32)
+            other = server.submit(prompt_of(rng, cfg, 8), 6)
+            got = []
+            async for t in victim:
+                got.append(t)
+                if len(got) == 2:
+                    await victim.cancel()
+                    break
+            assert victim.request.cancelled
+            assert victim.request.cancel_state in ("prefilling", "decoding")
+            survivor = await _collect(other)
+            assert len(survivor) == 6
+            return server.stats()
+
+        stats = drive(sched, body)
+        assert stats["cancelled_requests"] == 1
+        assert stats["finished_requests"] == 1
+
+    def test_cancel_while_queued(self, served):
+        cfg, params = served
+        rng = np.random.default_rng(4)
+        sched = make_sched(cfg, params, slots=1)
+
+        async def body(server):
+            busy = server.submit(prompt_of(rng, cfg, 8), 8)
+            queued = server.submit(prompt_of(rng, cfg, 8), 4)
+            await queued.cancel()
+            assert queued.request.cancelled
+            assert queued.request.cancel_state == "queued"
+            assert len(await _collect(queued)) == 0
+            assert len(await _collect(busy)) == 8
+
+        drive(sched, body)
+
+    def test_deadline_shed_closes_stream(self, served):
+        """A queued request whose SLO deadline lapses is shed: its stream
+        ends with zero tokens and the shed flag set."""
+        cfg, params = served
+        rng = np.random.default_rng(5)
+        sched = make_sched(cfg, params, slots=1)
+
+        async def body(server):
+            busy = server.submit(prompt_of(rng, cfg, 8), 12)
+            doomed = server.submit(prompt_of(rng, cfg, 8), 4,
+                                   deadline_steps=2)
+            assert await _collect(doomed) == []
+            assert doomed.request.shed
+            assert len(await _collect(busy)) == 12
+            return server.stats()
+
+        stats = drive(sched, body)
+        assert stats["shed_requests"] == 1
+
+    def test_close_cancels_outstanding(self, served):
+        cfg, params = served
+        rng = np.random.default_rng(6)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            stream = server.submit(prompt_of(rng, cfg, 9), 48)
+            async for _ in stream:
+                break  # client walks away without cancelling
+            server.close()
+            # the close path cancelled it; the stream observes the end
+            rest = await _collect(stream)
+            assert stream.request is not None and stream.request.cancelled
+            assert isinstance(rest, list)
+
+        drive(sched, body)
+
+
+class TestPriorities:
+    def test_interactive_preempts_batch_prefill(self, served):
+        """An interactive arrival one step after a long batch prompt
+        started chunking steals the budget: the batch request records the
+        preemption and the interactive one gets its first token first."""
+        cfg, params = served
+        rng = np.random.default_rng(7)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            batch = server.submit(prompt_of(rng, cfg, 20), 4,
+                                  priority="batch")
+            inter = server.submit(prompt_of(rng, cfg, 8), 3,
+                                  priority="interactive", arrival_step=1)
+            b, i = await asyncio.gather(
+                asyncio.ensure_future(_collect(batch)),
+                asyncio.ensure_future(_collect(inter)),
+            )
+            assert len(b) == 4 and len(i) == 3
+            assert (inter.request.first_token_step
+                    < batch.request.first_token_step)
+            assert batch.request.preemptions >= 1
+            return server.stats()
+
+        stats = drive(sched, body)
+        assert stats["preemptions"] >= 1
+        tiers = stats["tiers"]
+        assert tiers["batch"]["preemptions"] >= 1
+        assert tiers["interactive"]["itl_s"]["p50"] is not None
+
+
+class TestChatSessions:
+    def test_second_turn_hits_prefix_index(self, served):
+        """Turn 2's prompt (history + new user tokens) must adopt the
+        pinned pages of turn 1's written history via the sha1 index, and
+        closing the session must drain the pool."""
+        cfg, params = served
+        rng = np.random.default_rng(8)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            t1 = server.chat("s", prompt_of(rng, cfg, 17), 3)
+            await _collect(t1)
+            sess = server.sessions["s"]
+            assert sess.turns == 1 and len(sess.pinned) >= 1
+            # turn 1 wrote 17 + 3 - 1 = 19 KV positions -> 2 full pages
+            assert len(sess.pinned) == 2
+            assert t1.request.pinned_pages == sess.pinned
+
+            t2 = server.chat("s", prompt_of(rng, cfg, 5), 3)
+            toks = await _collect(t2)
+            assert len(toks) == 3
+            assert sched.prefix_hits >= 1
+            assert t2.request.prefix_reused_tokens == 16  # both full pages
+            # pin handoff: the new pin covers the grown history
+            assert server.sessions["s"].pinned == t2.request.pinned_pages
+            server.close_session("s")
+            sched.pager.check()
+            assert sched.pager.pages_in_use == 0
+
+        drive(sched, body)
+
+    def test_cancelled_turn_preserves_session(self, served):
+        """A turn cancelled mid-stream must not advance the history or
+        disturb the previous turn's pins."""
+        cfg, params = served
+        rng = np.random.default_rng(9)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            t1 = server.chat("s", prompt_of(rng, cfg, 17), 3)
+            await _collect(t1)
+            sess = server.sessions["s"]
+            hist_len, pins = len(sess.history), sess.pinned
+
+            t2 = server.chat("s", prompt_of(rng, cfg, 5), 16)
+            async for _ in t2:
+                await t2.cancel()
+                break
+            assert t2.request.cancelled
+            assert len(sess.history) == hist_len and sess.pinned == pins
+            server.close_session("s")
+
+        drive(sched, body)
+
+
+class TestTCPFrontDoor:
+    def test_roundtrip_and_disconnect(self, served):
+        """One client streams to completion over a real socket; a second
+        hangs up mid-stream and must be cancelled server-side."""
+        cfg, params = served
+        rng = np.random.default_rng(10)
+        sched = make_sched(cfg, params)
+
+        async def body(server):
+            door = TCPFrontDoor(server)
+            await door.start()
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", door.port)
+            writer.write(json.dumps({
+                "prompt": prompt_of(rng, cfg, 9).tolist(),
+                "max_new_tokens": 4, "priority": "batch",
+            }).encode() + b"\n")
+            await writer.drain()
+            msgs = []
+            while True:
+                msg = json.loads(await reader.readline())
+                msgs.append(msg)
+                if msg.get("done"):
+                    break
+            writer.close()
+            assert len(msgs) == 5  # 4 {"token": t} lines + the done line
+            assert all("token" in m for m in msgs[:-1])
+            assert msgs[-1]["done"] and msgs[-1]["tokens"] == 4
+            assert not msgs[-1]["cancelled"]
+
+            r2, w2 = await asyncio.open_connection("127.0.0.1", door.port)
+            w2.write(json.dumps({
+                "prompt": prompt_of(rng, cfg, 9).tolist(),
+                "max_new_tokens": 32,
+            }).encode() + b"\n")
+            await w2.drain()
+            await r2.readline()  # first streamed token
+            w2.close()  # disconnect mid-stream
+            for _ in range(500):
+                await asyncio.sleep(0)
+                if sched.cancelled:
+                    break
+            assert len(sched.cancelled) == 1
+            await server.drain()
+            await door.stop()
+            return server.stats()
+
+        stats = drive(sched, body)
+        assert stats["cancelled_requests"] == 1
+        assert stats["finished_requests"] == 1
+
+
+class TestSimulatedClients:
+    def test_harness_cancels_and_reports_tiers(self, served):
+        """The --server launcher harness: tiered rotating clients, every
+        3rd disconnecting after one token — at least one real cancel,
+        both tiers in stats, pool drained."""
+        cfg, params = served
+        sched = make_sched(cfg, params)
+        reqs = poisson_trace(np.random.default_rng(11), 6, cfg.vocab_size,
+                             6, max_prompt=14)
+        stats = simulate_clients(sched, reqs, disconnect_every=3,
+                                 disconnect_after=1)
+        assert stats["cancelled_requests"] >= 1
+        assert {"interactive", "batch"} <= set(stats["tiers"])
+        assert stats["paged"]["pages_in_use"] == 0
+        assert len(stats["clients"]) == 6
+        assert sum(c["disconnected"] for c in stats["clients"]) == 2

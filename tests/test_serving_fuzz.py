@@ -17,6 +17,11 @@ bit-exactness contract of the paged cache.  The shared-prefix tests force
 prefix reuse (deterministic arrival overlap) and assert both that reuse
 happened and that logits still match the slot oracle exactly.
 
+The cancellation axis (TestCancellationFuzz) injects random mid-flight
+cancels/disconnects into the joint run: ``PageAllocator.check()`` must
+hold after every step, the pool must drain to zero pages, and every
+SURVIVING request must still match its alone run to the same bars.
+
 The seed comes from the ``rng_seed`` fixture (stable per test node id) and
 can be pinned via ``REPRO_FUZZ_SEED`` — CI runs the kv-format × layout
 matrix with a fixed seed; the nightly workflow runs the ``slow`` suite
@@ -465,6 +470,129 @@ class TestShardedParity:
     @pytest.mark.slow
     def test_sharded_bgpp_2x1(self, layout):
         _sharded_parity_oracle("bgpp", layout, (2, 1), 0)
+
+
+# --------------------------------------------------------------------------
+# cancellation axis: random disconnects must leak nothing and perturb nobody
+# --------------------------------------------------------------------------
+
+
+def _cancel_plan(rng, reqs):
+    """Random cancel/disconnect plan over roughly half the trace.  Token
+    triggers model a client hanging up after k streamed tokens (guaranteed
+    to fire while the request is still DECODING when ``k <
+    max_new_tokens``); step triggers land at arbitrary scheduler steps,
+    catching requests queued, mid-chunked-prefill, decoding — or already
+    gone (cancel() idempotence).  The first victim is always a token
+    trigger so every plan produces at least one live cancel."""
+    plan = {}
+    victims = list(rng.permutation(len(reqs))[:max(1, len(reqs) // 2)])
+    sure = max(range(len(reqs)), key=lambda i: reqs[i].max_new_tokens)
+    if sure not in victims:
+        victims[0] = sure
+    for idx in victims:
+        r = reqs[idx]
+        if idx == sure or rng.random() < 0.5:
+            # v <= max_new - 2: the prefill-completion step can bank TWO
+            # tokens at once (first token + same-step decode), so two
+            # tokens of headroom guarantee the cancel lands while live
+            plan[r.rid] = ("tokens",
+                           int(rng.integers(1, r.max_new_tokens - 1)))
+        else:
+            plan[r.rid] = ("step", int(rng.integers(1, 30)))
+    return plan
+
+
+def _run_with_cancels(cfg, params, layout, reqs, plan):
+    """Joint chunked run with mid-flight cancels injected between steps —
+    ``PageAllocator.check()`` after EVERY step is the leak gate, and the
+    pool must fully drain once the trace ends."""
+    sched = Scheduler(params, cfg, layout, admission="chunked",
+                      chunk_budget=CHUNK_BUDGET, record_logits=True)
+    by_rid = {r.rid: r for r in reqs}
+    for r in reqs:
+        sched.submit(r)
+    pending = dict(plan)
+    for _ in range(2000):
+        if not sched.num_pending:
+            break
+        sched.step()
+        for rid, (kind, v) in list(pending.items()):
+            r = by_rid[rid]
+            if ((kind == "tokens" and len(r.generated) >= v)
+                    or (kind == "step" and sched.step_count >= v)):
+                sched.cancel(rid)  # False when already finished: idempotent
+                del pending[rid]
+        if sched.pager is not None:
+            sched.pager.check()
+    assert not sched.num_pending, "trace did not drain"
+    assert len(sched.finished) + len(sched.cancelled) == len(reqs)
+    assert max(sched.prefill_tokens_per_step, default=0) <= CHUNK_BUDGET
+    if sched.pager is not None:
+        sched.pager.check()
+        assert sched.pager.pages_in_use == 0, "cancellation leaked pages"
+    return sched, {r.rid: r for r in sched.finished}
+
+
+def _cancel_fuzz_oracle(arch_key, kv_format, seed, n_requests, layout):
+    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
+    rng = np.random.default_rng(seed)
+    cfg, params = _model(arch_key)
+    reqs = _random_requests(rng, cfg, n_requests,
+                            teacher_forced=kv_format != "bf16")
+    for r in reqs:
+        # the token-trigger guarantee in _cancel_plan needs >= 3 decode
+        # tokens of budget; pad the teacher-forced tail to match
+        if r.max_new_tokens < 3:
+            extra = 3 - r.max_new_tokens
+            r.max_new_tokens = 3
+            if r.forced_tokens is not None:
+                r.forced_tokens = np.concatenate([
+                    r.forced_tokens,
+                    rng.integers(0, cfg.vocab_size, (extra,))
+                    .astype(np.int32),
+                ])
+    clones = [_clone(r, r.arrival_step) for r in reqs]
+    for c in clones:  # stir priority scheduling into the fuzzed order too
+        c.priority = "interactive" if rng.random() < 0.5 else "batch"
+    plan = _cancel_plan(rng, clones)
+    meta = {"oracle": "cancel-fuzz", "arch": arch_key,
+            "kv_format": kv_format, "layout": layout, "seed": seed,
+            "plan": ",".join(f"{r}@{k}{v}" for r, (k, v) in plan.items())}
+    with _dump_failing_trace(meta, reqs):
+        sched, joint = _run_with_cancels(
+            cfg, params, _layout_for(cfg, kv_format, layout), clones, plan)
+        assert len(sched.cancelled) >= 1, "plan produced no live cancel"
+        survivors = [r for r in reqs if r.rid in joint]
+        assert survivors, "every request was cancelled; nothing to oracle"
+        _compare_to_alone_runs(cfg, params, survivors, joint, arch_key,
+                               kv_format, layout)
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+class TestCancellationFuzz:
+    """Front-door cancellation axis of the fuzz matrix: random cancels and
+    disconnects at arbitrary lifecycle points must leak zero pages and
+    leave every surviving request's logits exactly what an alone run
+    produces (bit-exact bf16 / 1e-5 teacher-forced elsewhere)."""
+
+    def test_dense_bf16_cancel(self, rng_seed, layout):
+        _cancel_fuzz_oracle("dense", "bf16", rng_seed, 5, layout)
+
+    def test_dense_int8_cancel(self, rng_seed, layout):
+        _cancel_fuzz_oracle("dense", "int8", rng_seed, 4, layout)
+
+    @pytest.mark.slow
+    def test_dense_bgpp_cancel(self, rng_seed, layout):
+        _cancel_fuzz_oracle("dense", "bgpp", rng_seed, 4, layout)
+
+    @pytest.mark.slow
+    def test_swa_bf16_cancel(self, rng_seed, layout):
+        _cancel_fuzz_oracle("swa", "bf16", rng_seed, 4, layout)
+
+    @pytest.mark.slow
+    def test_dense_bf16_cancel_heavy(self, rng_seed, layout):
+        _cancel_fuzz_oracle("dense", "bf16", rng_seed + 1, 8, layout)
 
 
 class TestSharedPrefixReuse:
