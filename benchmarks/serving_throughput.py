@@ -62,6 +62,15 @@ the single-device occupancy the CI meshed launcher smoke is gated on.
              Reports prefix-hit rate and peak resident KV bytes next to the
              slot layout's dense allocation for the same traffic.
 
+Full (non ``--quick``) runs also emit a ``serving_<fmt>_spec`` row: the
+SAME chunked trace re-run with bit-plane speculative decoding on
+(``spec_decode=True``, the config's gamma/planes).  The row carries the
+acceptance economics — ``accepted_tokens_per_step`` (accepted tokens per
+*physical* serve_step, draft + verify) and the per-accepted-token
+kv/weight byte prices — and the run fails if the speculative trace's
+generated tokens differ from the chunked row's in a single position
+(speculation may only move wall clock, never tokens).
+
 ``--server-sim`` additionally replays the trace through the asyncio front
 door (``repro.serving.server.simulate_clients``: tiered rotating clients,
 every 3rd disconnecting after one token) on the paged layout and emits an
@@ -140,8 +149,9 @@ def mesh_kv_entries(layout, cfg):
 
 
 def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
-                  shared=None, rules=None):
+                  shared=None, rules=None, sched_kw=None, sink=None):
     kw = {} if rules is None else {"rules": rules}
+    kw |= sched_kw or {}
     sched = Scheduler(params, cfg, layout, admission=admission,
                       chunk_budget=chunk_budget,
                       prefill_kw=dict(block_q=16, block_k=32),
@@ -196,6 +206,23 @@ def run_scheduler(params, cfg, layout, reqs, admission, chunk_budget,
             "resident_kv_bytes_peak": pg["resident_kv_bytes_peak"],
             "slot_resident_kv_bytes": pg["slot_resident_kv_bytes"],
         }
+    if "spec" in stats:
+        sp = stats["spec"]
+        out |= {
+            "spec_gamma": sp["gamma"],
+            "spec_draft_planes": sp["draft_planes"],
+            "accepted_tokens_per_step": sp["accepted_tokens_per_step"],
+            "accepted_tokens_per_round": sp["accepted_tokens_per_round"],
+            "draft_hit_rate": sp["draft_hit_rate"],
+            "kv_bytes_per_accepted_token": sp["kv_bytes_per_accepted_token"],
+            "weight_bytes_per_accepted_token":
+                sp["weight_bytes_per_accepted_token"],
+            "modeled_weight_bytes_per_accepted_token":
+                sp["modeled_weight_bytes_per_accepted_token"],
+        }
+    if sink is not None:
+        sink["generated"] = {r.rid: [int(t) for t in r.generated]
+                             for r in sched.finished}
     return out, sched.shared_fns()
 
 
@@ -332,6 +359,7 @@ def main():
         entry = {"decode_kernel": dk_mode, "weight_format": wf_mode,
                  "kv_read_mesh": mesh_kv_entries(layout, cfg)}
         shared = None
+        chunk_sink = {}
         runtimes = ["chunked", "eager"] + ([] if args.quick else ["lockstep"])
         for runtime in runtimes:
             rng = np.random.default_rng(args.seed)  # identical trace
@@ -351,6 +379,7 @@ def main():
                 entry[runtime], shared = run_scheduler(
                     params, cfg, layout, reqs, runtime, args.chunk_budget,
                     shared=shared, rules=rules,
+                    sink=chunk_sink if runtime == "chunked" else None,
                 )
             r = entry[runtime]
             us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
@@ -476,6 +505,44 @@ def main():
             if r["prefix_hit_rate"] <= 0:
                 ok = False
             if r["resident_kv_bytes_peak"] >= r["slot_resident_kv_bytes"]:
+                ok = False
+
+        if not args.quick and not layout.local_layers:
+            # speculative decoding over the SAME chunked trace (global-only
+            # stacks — local ring layers overwrite what rollback needs):
+            # wall clock may move, tokens may not.  The row carries the
+            # acceptance economics next to the chunked baseline.
+            rng = np.random.default_rng(args.seed)
+            qreqs = poisson_trace(rng, args.requests, cfg.vocab_size,
+                                  args.max_new, arrival_rate=3.0,
+                                  min_new=max(2, args.max_new // 3),
+                                  max_prompt=min(23, args.max_seq - 2))
+            spec_sink = {}
+            entry["spec"], _ = run_scheduler(
+                params, cfg, layout, qreqs, "chunked", args.chunk_budget,
+                shared=shared, rules=rules,
+                sched_kw={"spec_decode": True}, sink=spec_sink,
+            )
+            r = entry["spec"]
+            us = 1e6 / r["tokens_per_s"] if r["tokens_per_s"] else 0.0
+            emit(f"serving_{fmt}_spec", us,
+                 f"occ={r['mean_occupancy']:.3f};tok_s={r['tokens_per_s']}"
+                 f";decode_kernel={dk_mode}"
+                 f";gamma={r['spec_gamma']};planes={r['spec_draft_planes']}"
+                 f";acc_step={r['accepted_tokens_per_step']}"
+                 f";acc_round={r['accepted_tokens_per_round']}"
+                 f";kv_per_accepted={r['kv_bytes_per_accepted_token']}"
+                 f";w_per_accepted={r['weight_bytes_per_accepted_token']}")
+            print(f"# {fmt}: spec accepted/step "
+                  f"{r['accepted_tokens_per_step']:.3f} "
+                  f"({r['accepted_tokens_per_round']:.2f}/round, draft hit "
+                  f"rate {r['draft_hit_rate']:.2f}); kv "
+                  f"{r['kv_bytes_per_accepted_token']} B and weight "
+                  f"{r['weight_bytes_per_accepted_token']} B per accepted "
+                  f"token")
+            if spec_sink["generated"] != chunk_sink["generated"]:
+                print(f"# REGRESSION {fmt}: speculative decode changed the "
+                      f"generated tokens vs the chunked run")
                 ok = False
 
     if args.server_sim:
@@ -653,7 +720,7 @@ def main():
 
     print(f"# chunked >= eager occupancy, chunked itl_p95 <= eager, paged "
           f"prefix reuse + resident-KV win, bstc weights <= bf16/2 + "
-          f"measured/modeled reconciliation"
+          f"measured/modeled reconciliation, spec tokens identical"
           f"{', baseline gate' if args.baseline else ''}: {ok}")
     if args.out:
         with open(args.out, "w") as f:

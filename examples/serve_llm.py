@@ -6,6 +6,7 @@ bit-planar BGPP KV cache).
         [--kv-format int8|bf16|bgpp] [--admission chunked|eager]
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16]
         [--weight-format bf16|int8|bstc] [--server]
+        [--spec-decode] [--draft-gamma 4] [--draft-planes 4]
         [--chunk-budget 8] [--steps 24] [--batch 4] [--mesh 2,4]
 
 ``--server`` swaps the offline replay for the asyncio front door
@@ -36,6 +37,7 @@ import jax
 from repro.configs import (ARCH_REGISTRY, WEIGHT_FORMATS,
                            apply_bgpp_overrides,
                            apply_decode_kernel_override,
+                           apply_spec_decode_overrides,
                            apply_weight_format_override, get_config)
 from repro.models import model_zoo
 from repro.serving import kv_cache as kvc
@@ -134,6 +136,16 @@ def main():
                     help="demo the asyncio front door instead: two-turn "
                          "chat session (prefix-index reuse across turns), "
                          "priority preemption, and a mid-stream disconnect")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="bit-plane speculative decoding: truncated-plane "
+                         "drafts + batched verify/rollback, bit-identical "
+                         "output with an accepted-tokens/step report")
+    ap.add_argument("--draft-gamma", type=int, default=None,
+                    help="draft tokens per slot per speculative round "
+                         "(default: config's)")
+    ap.add_argument("--draft-planes", type=int, default=None,
+                    help="MSB magnitude bit-planes kept in the draft "
+                         "weights, 1-8 (default: config's)")
     ap.add_argument("--chunk-budget", type=int, default=8)
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
@@ -152,6 +164,9 @@ def main():
     )
     cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
     cfg = apply_weight_format_override(cfg, args.weight_format)
+    cfg = apply_spec_decode_overrides(cfg, enabled=args.spec_decode or None,
+                                      gamma=args.draft_gamma,
+                                      planes=args.draft_planes)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("this driver serves transformer families; "
                          "see tests/test_serving.py for ssm/hybrid/enc-dec")
@@ -225,11 +240,21 @@ def main():
               f"{kv['decode_bytes_per_device_per_step']/1e3:.1f} kB/device/"
               f"step over {kv['kv_shards']} kv shards, interconnect "
               f"{kv['interconnect_bytes_per_step']/1e3:.2f} kB/step")
+    if "spec" in stats:
+        sp = stats["spec"]
+        print(f"[serve] spec decode (gamma={sp['gamma']}, "
+              f"planes={sp['draft_planes']}): "
+              f"accepted/step={sp['accepted_tokens_per_step']:.3f}, "
+              f"{sp['accepted_tokens_per_round']:.2f} accepted/round, "
+              f"kv {sp['kv_bytes_per_accepted_token']/1e3:.1f} kB and weight "
+              f"{sp['weight_bytes_per_accepted_token']/1e3:.1f} kB per "
+              f"accepted token")
     if "paged" in stats:
         pg = stats["paged"]
         print(f"[serve] paged: prefix hit rate {pg['prefix_hit_rate']:.3f}, "
               f"resident KV peak {pg['resident_kv_bytes_peak']/1e3:.1f} kB "
-              f"vs {pg['slot_resident_kv_bytes']/1e3:.1f} kB slot-dense")
+              f"vs {pg['slot_resident_kv_bytes']/1e3:.1f} kB slot-dense, "
+              f"pages_in_use={pg['pages_in_use']}")
     for req in sorted(sched.finished, key=lambda r: r.rid)[:2]:
         print(f"[serve] seq{req.rid}: {req.generated[:16]}...")
 

@@ -5,6 +5,7 @@ from repro.configs.base import (  # noqa: F401
     WEIGHT_FORMATS,
     apply_bgpp_overrides,
     apply_decode_kernel_override,
+    apply_spec_decode_overrides,
     apply_weight_format_override,
     get_config,
 )

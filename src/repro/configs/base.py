@@ -46,6 +46,16 @@ class MCBPOptions:
     # "kernel" — auto = compiled Pallas kernel on TPU backends, legacy jnp
     # attend elsewhere (see repro.serving.kernel_decode)
     decode_kernel: str = "auto"
+    # speculative decoding (repro.serving.spec_decode): propose draft_gamma
+    # tokens per slot with a truncated-bit-plane forward, verify batched
+    # through serve_step, accept/rollback per slot.  Greedy output is
+    # bit-identical to non-speculative decode; REPRO_SPEC_DECODE /
+    # REPRO_DRAFT_GAMMA / REPRO_DRAFT_PLANES override for CI matrices.
+    spec_decode: bool = False
+    draft_gamma: int = 4
+    # MSB magnitude bit-planes the draft weights keep (1..8 of int8's 7
+    # magnitude bits + sign; >= 7 keeps full int8 precision)
+    draft_planes: int = 4
 
     def __post_init__(self):
         if self.bstc_weights:
@@ -63,6 +73,16 @@ class MCBPOptions:
                 f"weight_format={self.weight_format!r} is not one of "
                 f"{WEIGHT_FORMATS} (config mcbp.weight_format or "
                 f"$REPRO_WEIGHT_FORMAT)"
+            )
+        if not 1 <= int(self.draft_gamma):
+            raise ValueError(
+                f"draft_gamma={self.draft_gamma!r} must be >= 1 (tokens "
+                f"drafted per speculative round)"
+            )
+        if not 1 <= int(self.draft_planes) <= 8:
+            raise ValueError(
+                f"draft_planes={self.draft_planes!r} must be in 1..8 (MSB "
+                f"magnitude bit-planes the draft weights keep)"
             )
 
 
@@ -88,6 +108,24 @@ def apply_weight_format_override(cfg, fmt: Optional[str] = None):
     return dataclasses.replace(
         cfg, mcbp=dataclasses.replace(cfg.mcbp, weight_format=str(fmt))
     )
+
+
+def apply_spec_decode_overrides(cfg, enabled: Optional[bool] = None,
+                                gamma: Optional[int] = None,
+                                planes: Optional[int] = None):
+    """Return ``cfg`` with its speculative-decoding knobs replaced
+    (``None`` keeps the config's value) — the one code path behind every
+    CLI's ``--spec-decode`` / ``--draft-gamma`` / ``--draft-planes``
+    flags.  Validation happens in :meth:`MCBPOptions.__post_init__`."""
+    if enabled is None and gamma is None and planes is None:
+        return cfg
+    mo = dataclasses.replace(
+        cfg.mcbp,
+        spec_decode=cfg.mcbp.spec_decode if enabled is None else bool(enabled),
+        draft_gamma=cfg.mcbp.draft_gamma if gamma is None else int(gamma),
+        draft_planes=cfg.mcbp.draft_planes if planes is None else int(planes),
+    )
+    return dataclasses.replace(cfg, mcbp=mo)
 
 
 def apply_bgpp_overrides(cfg, rounds: Optional[int] = None,

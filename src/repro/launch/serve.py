@@ -7,6 +7,7 @@ engine (per-slot positions, int8 / bgpp KV caches, request scheduler).
         [--kv-layout slot|paged] [--page-size 8] [--shared-prefix 16] \\
         [--bgpp-rounds 4] [--bgpp-keep-ratio 0.25] \\
         [--weight-format bf16|int8|bstc] \\
+        [--spec-decode] [--draft-gamma 4] [--draft-planes 4] \\
         [--server] [--disconnect-every 3] [--disconnect-after 1] \\
         [--trace-out trace.json] [--mesh 2,4 | --data 1 --model 1]
 
@@ -28,7 +29,13 @@ are reported (``kv_read`` in the stats/trace).  ``--weight-format``
 flips the decode projections onto the serve-time weight path
 (``repro.serving.weights``): int8/bstc quantized records with the
 ``weight_read`` byte counter priced from the BSTC coded layout, bf16 the
-bit-for-bit raw default.  ``--trace-out`` dumps
+bit-for-bit raw default.  ``--spec-decode`` turns on bit-plane
+speculative decoding (``repro.serving.spec_decode``): a
+``--draft-planes``-truncated copy of the serve weights drafts
+``--draft-gamma`` tokens per slot per round, a batched verify chain
+accepts/rolls back, and the printed stats gain an accepted-tokens/step
+acceptance line — the generated tokens stay bit-identical to the
+non-speculative run.  ``--trace-out`` dumps
 per-request latency/queue-wait plus TTFT/ITL p50/p95 and aggregate
 throughput as JSON so runs are reproducible (``--seed``) and comparable
 across PRs.
@@ -57,6 +64,7 @@ import jax
 from repro.configs import (ARCH_REGISTRY, WEIGHT_FORMATS,
                            apply_bgpp_overrides,
                            apply_decode_kernel_override,
+                           apply_spec_decode_overrides,
                            apply_weight_format_override, get_config)
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_debug_mesh
@@ -101,6 +109,19 @@ def main():
                          "default), int8, or bstc (two-state coded pricing "
                          "in weight_read) (default: config's; env "
                          "REPRO_WEIGHT_FORMAT overrides)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="bit-plane speculative decoding: truncated-plane "
+                         "draft weights propose --draft-gamma tokens per "
+                         "slot per round, verified and rolled back in one "
+                         "batched chain (bit-identical output; env "
+                         "REPRO_SPEC_DECODE overrides)")
+    ap.add_argument("--draft-gamma", type=int, default=None,
+                    help="draft tokens per slot per speculative round "
+                         "(default: the config's, usually 4)")
+    ap.add_argument("--draft-planes", type=int, default=None,
+                    help="MSB magnitude bit-planes kept in the draft "
+                         "weights, 1-8; >= 7 keeps every bit (default: the "
+                         "config's, usually 4)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
@@ -146,6 +167,9 @@ def main():
     )
     cfg = apply_decode_kernel_override(cfg, args.decode_kernel)
     cfg = apply_weight_format_override(cfg, args.weight_format)
+    cfg = apply_spec_decode_overrides(cfg, enabled=args.spec_decode or None,
+                                      gamma=args.draft_gamma,
+                                      planes=args.draft_planes)
     if cfg.family not in ("dense", "moe", "vlm"):
         raise SystemExit("continuous batching driver covers transformer "
                          "families; ssm/hybrid/enc-dec decode in tests/")
@@ -240,6 +264,19 @@ def main():
           f"{wr['decode_bf16_equiv_bytes_per_step']/1e3:.1f} kB, "
           f"{wr['decode_bytes_reduction_vs_bf16']}x reduction, "
           f"measured/modeled {wr['measured_over_modeled']})")
+    if "spec" in stats:
+        sp = stats["spec"]
+        print(f"[serve] spec decode (gamma={sp['gamma']}, "
+              f"planes={sp['draft_planes']}, source={sp['draft_source']}): "
+              f"accepted/step={sp['accepted_tokens_per_step']:.3f} "
+              f"({sp['accepted_tokens']} tokens, {sp['rounds']} rounds, "
+              f"{sp['accepted_tokens_per_round']:.2f}/round, draft hit rate "
+              f"{sp['draft_hit_rate']:.2f})")
+        print(f"[serve] spec bytes/accepted-token: "
+              f"kv {sp['kv_bytes_per_accepted_token']/1e3:.1f} kB, "
+              f"weight {sp['weight_bytes_per_accepted_token']/1e3:.1f} kB "
+              f"(modeled bit-plane draft "
+              f"{sp['modeled_weight_bytes_per_accepted_token']/1e3:.1f} kB)")
     if "bgpp" in kv:
         bg = kv["bgpp"]
         print(f"[serve] bgpp two-phase: {bg['rounds']} rounds, "
@@ -253,7 +290,8 @@ def main():
         print(f"[serve] paged: prefix hit rate {pg['prefix_hit_rate']:.3f} "
               f"({pg['prefix_hit_tokens']} tokens over {pg['prefix_hits']} "
               f"hits), resident KV peak {pg['resident_kv_bytes_peak']/1e3:.1f}"
-              f" kB vs {pg['slot_resident_kv_bytes']/1e3:.1f} kB slot-dense")
+              f" kB vs {pg['slot_resident_kv_bytes']/1e3:.1f} kB slot-dense, "
+              f"pages_in_use={pg['pages_in_use']}")
     if args.trace_out:
         stats["config"] = {
             "arch": cfg.name, "kv_format": args.kv_format,
@@ -268,6 +306,9 @@ def main():
             "bgpp_keep_ratio": cfg.mcbp.bgpp_keep_ratio,
             "decode_kernel": cfg.mcbp.decode_kernel,
             "weight_format": sched.weight_format,
+            "spec_decode": sched.spec.enabled,
+            "draft_gamma": sched.spec.gamma,
+            "draft_planes": sched.spec.planes,
             "server": args.server,
             "disconnect_every": args.disconnect_every,
             "disconnect_after": args.disconnect_after,

@@ -573,6 +573,17 @@ def make_serve_step(cfg, layout: kvc.CacheLayout, rules=sh.ShardingRules()):
     per step; ``kv_format="bgpp"`` global layers then attend two-phase —
     bit-plane prediction first, full-precision gather only for the
     surviving top-k (:func:`_bgpp_paged_decode_attend`).
+
+    Rollback contract (speculative decoding relies on this): the step is
+    write-then-attend with per-slot validity masks (``arange <= pos``) and
+    out-of-range scatter indices dropping, so a position's contents are
+    only ever observed in a step that has ALREADY rewritten them from the
+    fed token.  Rewinding ``cache["pos"]`` after speculative steps is
+    therefore sufficient to un-happen them on slot layouts — global
+    layers only; sliding-window rings physically overwrite window lanes,
+    which is why ``spec_decode`` refuses local-layer stacks — and paged
+    layouts additionally rewind the page allocator so freed pages can't
+    service a later prefix hit (``PageAllocator.rewind_slot``).
     """
     dtype = layers._dtype(cfg.dtype)
     thetas = transformer.layer_thetas(cfg) if cfg.family != "ssm" else None

@@ -560,6 +560,44 @@ def zero_pages(store: Tree, page_ids: jax.Array, page_size: int) -> Tree:
     return store
 
 
+def zero_token_range(store: Tree, tpos: jax.Array, *, page_table=None,
+                     page_size: int = 0, max_seq: int = 0) -> Tree:
+    """Zero per-slot logical token positions across EVERY leaf of a global
+    KV store — the speculative-decode rollback scrub.
+
+    ``tpos`` is ``(B, N)`` int32: for each batch slot, up to ``N``
+    positions whose rows held speculative writes past the accepted
+    frontier; unused lanes carry :data:`OOB_INDEX` (or any out-of-range
+    value) and drop, so ONE jitted scrub serves every accept pattern.
+
+    ``page_table`` selects the paged-pool path: positions are translated
+    through each slot's table row (unmapped pages — e.g. pages the
+    allocator already freed wholesale — drop; :func:`zero_pages` scrubs
+    those).  The slot path scatters into the per-slot ``(B, ..., S, ...)``
+    stacks, covering k/v bodies, int8 scales, and bgpp sign/magnitude
+    planes alike — no leaf ever keeps rolled-back contents.
+    """
+    safe = jnp.where((tpos >= 0) & (tpos < max_seq), tpos, OOB_INDEX)
+    store = dict(store)
+    if page_table is not None:
+        page = jnp.clip(tpos // page_size, 0, page_table.shape[-1] - 1)
+        pid = jnp.take_along_axis(page_table, page, axis=1)  # (B, N)
+        ok = (tpos >= 0) & (tpos < max_seq) & (pid >= 0)
+        phys = jnp.where(
+            ok, pid * page_size + tpos % page_size, OOB_INDEX
+        ).reshape(-1)
+        for n, a in store.items():
+            store[n] = a.at[(slice(None),) * _tok_dim(n) + (phys,)].set(0)
+        return store
+    bidx = jnp.arange(tpos.shape[0])[:, None]  # (B, 1) against (B, N) lanes
+    for n, a in store.items():
+        if n == "k_planes":  # (L, NBITS, B, Hk, S, D/8)
+            store[n] = a.at[:, :, bidx, :, safe].set(0)
+        else:  # (L, B, Hk, S, ...)
+            store[n] = a.at[:, bidx, :, safe].set(0)
+    return store
+
+
 def page_bytes(store: Tree, page_size: int) -> int:
     """Bytes one physical page occupies across every leaf of a pool (host
     arithmetic from shapes — the allocator's resident-KV accounting)."""

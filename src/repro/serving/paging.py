@@ -139,6 +139,51 @@ class PageAllocator:
         self._registered[slot] = 0
         return freed
 
+    def rewind_slot(self, slot: int, keep_tokens: int) -> List[int]:
+        """Roll ``slot`` back so only logical positions ``[0, keep_tokens)``
+        stay valid — the speculative-decode rollback path.  Pages entirely
+        past the kept frontier are decref'd/unmapped (freed at refcount 0:
+        generation bumped, prefix entries pruned, returned for device
+        zeroing); the page the frontier straddles stays mapped but has ALL
+        its prefix-index digests deregistered — its tail rows held
+        speculative garbage, so a later prompt matching the stale hash must
+        never adopt it (the cross-page-boundary rollback bugfix,
+        tests/test_paging.py).  The slot's registration high-water mark is
+        clamped so later ``register_prefix`` calls re-hash from the kept
+        frontier."""
+        freed = []
+        for pi in range(self.pages_per_slot):
+            p = int(self.table[slot, pi])
+            if p < 0:
+                continue
+            if pi * self.page_size >= keep_tokens:
+                # page fully past the accepted frontier: give it back
+                assert self.refcount[p] > 0, f"double free of page {p}"
+                self.refcount[p] -= 1
+                if self.refcount[p] == 0:
+                    self.generation[p] += 1
+                    self._free.append(p)
+                    freed.append(p)
+                    for d in self._page_digests.pop(p, ()):
+                        self._prefix.pop(d, None)
+                self.table[slot, pi] = -1
+                self.dirty = True
+            elif (pi + 1) * self.page_size > keep_tokens:
+                # frontier page: kept mapped (its head rows are valid), but
+                # rewound tail rows invalidate every prefix that covered it.
+                # Speculative slots never share their frontier page (shared
+                # pages are full prompt pages nobody writes again).
+                assert self.refcount[p] == int(self.pins[p]) + 1, (
+                    f"rewinding shared page {p} would corrupt its sharers"
+                )
+                for d in self._page_digests.pop(p, ()):
+                    self._prefix.pop(d, None)
+        self._registered[slot] = min(
+            int(self._registered[slot]),
+            (keep_tokens // self.page_size) * self.page_size,
+        )
+        return freed
+
     # ------------------------------------------------------------------
     # prefix reuse
     # ------------------------------------------------------------------

@@ -120,6 +120,11 @@ class Request:
     # page ids pinned at DONE for keep_prefix_resident (release with
     # Scheduler.unpin_pages when the session closes)
     pinned_pages: tuple = ()
+    # speculative decoding: tokens accepted in each round this request
+    # took part in (each entry in 1..gamma+1 — the corrected token alone
+    # up to every draft plus the bonus token) and total drafts proposed
+    spec_accepts: List[int] = dataclasses.field(default_factory=list)
+    spec_drafted: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -168,6 +173,9 @@ class Request:
             "latency_s": round(self.finish_time - self.submit_time, 6),
             "tokens_per_s": round(len(self.generated) / wall, 3)
             if wall > 0 else None,
+            "spec_rounds": len(self.spec_accepts),
+            "spec_accepted_tokens": int(sum(self.spec_accepts)),
+            "spec_drafted_tokens": self.spec_drafted,
         }
 
     def cancel_record(self) -> dict:

@@ -61,6 +61,20 @@ Greedy sampling by default; pass ``sample_fn`` for anything richer, or set
 The scheduler is deliberately host-side python around jitted device steps —
 the same split a production server uses (device graph static, scheduling
 dynamic).
+
+Speculative decoding (``spec_decode=True`` / ``REPRO_SPEC_DECODE=on``, see
+``repro.serving.spec_decode``) replaces each batched decode step with one
+draft → verify → accept/rollback round (:meth:`Scheduler._spec_round`):
+``draft_gamma`` truncated-bit-plane serve_steps propose draft tokens per
+DECODING slot, up to ``gamma + 1`` full-precision serve_steps verify them
+(the scheduler's ordinary ``_pick_token`` — forced or greedy over exact
+logits — is the verifier, so speculative output is BIT-identical to
+non-speculative decode), and every slot rolls back to its accepted
+frontier: per-slot ``pos`` rewind, allocator page invalidation
+(``PageAllocator.rewind_slot`` — generation counters + prefix-index
+deregistration), and a device scrub of the garbage tail rows across every
+store leaf.  ``stats()["spec"]`` reports accepted-tokens/step and kv +
+weight bytes per *accepted* token next to ``kv_read``/``weight_read``.
 """
 
 from __future__ import annotations
@@ -77,6 +91,7 @@ import jax.numpy as jnp
 from repro.distributed import sharding as sh
 from repro.serving import engine, kv_cache as kvc
 from repro.serving import sharded as shd
+from repro.serving import spec_decode as spd
 from repro.serving import weights as swt
 from repro.serving.paging import PageAllocator
 from repro.serving.request import (Request, Slot, SlotState, priority_rank)
@@ -112,6 +127,10 @@ class Scheduler:
         record_logits: bool = False,
         shared_fns: Optional[dict] = None,
         param_specs=None,
+        spec_decode: Optional[bool] = None,
+        draft_gamma: Optional[int] = None,
+        draft_planes: Optional[int] = None,
+        draft_fn: Optional[Callable[[Request, int], int]] = None,
     ):
         assert cfg.family in ("dense", "moe", "vlm"), (
             "the scheduler admits via transformer prefill; ssm/hybrid/enc-dec"
@@ -192,6 +211,63 @@ class Scheduler:
         # next-token feed per slot; EMPTY/PREFILLING rows decode token 0 into
         # garbage that per-slot valid masks + chunk overwrites keep invisible
         self.tokens = np.zeros((layout.batch, 1), np.int32)
+
+        # speculative decoding (repro.serving.spec_decode): kwarg > env >
+        # config, with env-driven enables soft-disabling on local-layer
+        # stacks (rings are not rollback-safe) and explicit ones raising
+        self.spec = spd.validate(
+            cfg, layout, spd.resolve(cfg, spec_decode, draft_gamma,
+                                     draft_planes)
+        )
+        self.draft_fn = draft_fn
+        self.draft_params = None
+        self._scrub_tokens = None
+        if self.spec.enabled:
+            if draft_fn is None and self.spec.planes < 7:
+                # truncated-plane draft weights, converted through the SAME
+                # weight-format path as the real ones so the compiled
+                # serve_step executable is reused as the draft forward
+                self.draft_params, _ = swt.prepare_serve_params(
+                    spd.truncate_plane_params(self.params, self.spec.planes),
+                    cfg, layout, self.weight_format,
+                )
+            else:
+                # planes >= 7 keeps full int8 precision: the real serve
+                # weights ARE the (perfect) draft model
+                self.draft_params = self.serve_params
+            if layout.global_layers:
+                g_specs = kvc.cache_specs(cfg, layout)["global"]
+                if layout.layout == "paged":
+                    self._scrub_tokens = jax.jit(
+                        lambda store, tpos, table: kvc.constrain_cache(
+                            kvc.zero_token_range(
+                                store, tpos, page_table=table,
+                                page_size=layout.page_size,
+                                max_seq=layout.max_seq,
+                            ), g_specs, rules,
+                        ),
+                        donate_argnums=(0,),
+                    )
+                else:
+                    self._scrub_tokens = jax.jit(
+                        lambda store, tpos: kvc.constrain_cache(
+                            kvc.zero_token_range(
+                                store, tpos, max_seq=layout.max_seq,
+                            ), g_specs, rules,
+                        ),
+                        donate_argnums=(0,),
+                    )
+        # spec-decode counters (stats()["spec"]): rounds run, drafts
+        # proposed/accepted, physical draft/verify steps, per-slot round
+        # participations (each round's first token is the free corrected
+        # one), best single-round accept
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_draft_steps = 0
+        self.spec_verify_steps = 0
+        self.spec_slot_rounds = 0
+        self.spec_max_accept = 0
 
         self.step_count = 0
         self.finished: List[Request] = []
@@ -606,6 +682,184 @@ class Scheduler:
             )
         self._sync_pages()
 
+    # ------------------------------------------------------------------
+    # speculative decoding (draft -> verify -> accept/rollback)
+    # ------------------------------------------------------------------
+
+    def _count_decode_step(self) -> None:
+        """Account one physical serve_step: the kv/weight byte prices are
+        static per-step totals, so draft, verify, and plain decode steps
+        all pay the same — which is exactly what keeps the accounting laws
+        (``decode_bytes == decode_steps * decode_bytes_per_step``) format-
+        and speculation-invariant.  The speculative *win* shows up in the
+        per-accepted-token columns, not by discounting the counter."""
+        self.decode_steps += 1
+        self.kv_bytes_read["decode"] += self._decode_read["total"]
+        self.kv_bytes_read["interconnect"] += \
+            self._decode_read["interconnect"]["total"]
+        self.weight_bytes_read["decode"] += self._weight_read["total"]
+
+    def _spec_round(self, live: List[Slot]) -> None:
+        """One draft -> verify -> accept/rollback round for every DECODING
+        slot (replaces the single batched decode step when spec decode is
+        on).
+
+        Drafts come from ``draft_fn(request, token_index)`` when given
+        (the oracles' perfect/adversarial injection point) or from a
+        ``gamma``-step chain of the compiled serve_step over the
+        truncated-plane ``draft_params``.  Verification feeds the draft
+        tokens through the REAL serve_step and picks each slot's true
+        token from the exact logits (``_pick_token`` — forced or greedy),
+        so every accepted token is bit-identical to what non-speculative
+        decode would have produced; a slot leaves the chain at its first
+        draft mismatch, after its corrected token.  Rollback then (1)
+        rewinds every row's ``pos`` (live slots to their accepted
+        frontier, every other row to its pre-round position), (2) invali-
+        dates paged pages past the frontier (``PageAllocator.rewind_slot``
+        + device page zeroing), and (3) zeroes the garbage tail rows
+        across every store leaf, so no speculative write survives
+        anywhere a later step could observe it."""
+        gamma = self.spec.gamma
+        B = self.layout.batch
+        # pre-round frontier P: this round's first write position per slot
+        P = {s.index: s.request.prompt_len + len(s.request.generated) - 1
+             for s in live}
+        reqs = {s.index: s.request for s in live}
+        if self.pager is not None:
+            for slot in live:
+                p = P[slot.index]
+                self.pager.ensure_range(
+                    slot.index, p, min(p + gamma + 1, self.layout.max_seq)
+                )
+            self._sync_pages()
+        # ---- draft: gamma proposed tokens per live slot --------------
+        drafts: Dict[int, List[int]] = {i: [] for i in P}
+        draft_steps = 0
+        if self.draft_fn is not None:
+            for slot in live:
+                req = reqs[slot.index]
+                n0 = len(req.generated)
+                drafts[slot.index] = [
+                    int(self.draft_fn(req, n0 + j)) for j in range(gamma)
+                ]
+        else:
+            # draft chain on the live cache: greedy argmax fed forward;
+            # its writes land past every frontier and are rolled back with
+            # the rest of the round's speculation
+            feed = self.tokens.copy()
+            for _ in range(gamma):
+                dlogits, self.cache = self.serve_step(
+                    self.draft_params, self.cache, jnp.asarray(feed)
+                )
+                drows = np.asarray(dlogits[:, -1], np.float32)
+                draft_steps += 1
+                self._count_decode_step()
+                for slot in live:
+                    tok = int(np.argmax(drows[slot.index]))
+                    drafts[slot.index].append(tok)
+                    feed[slot.index, 0] = tok
+            # undo the draft chain's pos drift before verification: the
+            # verify chain must write/attend at the same positions a
+            # non-speculative decode would
+            self.cache["pos"] = self.cache["pos"] - jnp.asarray(
+                gamma, self.cache["pos"].dtype
+            )
+        # ---- verify: feed drafts, accept while they match ------------
+        active = {slot.index: slot for slot in live}
+        accepted = {slot.index: 0 for slot in live}
+        finishes: List[Slot] = []
+        C = 0
+        while active and C < gamma + 1:
+            logits, self.cache = self.serve_step(
+                self.serve_params, self.cache, jnp.asarray(self.tokens)
+            )
+            rows = np.asarray(logits[:, -1], np.float32)
+            j, C = C, C + 1
+            self._count_decode_step()
+            self.spec_verify_steps += 1
+            self.decoded_tokens += len(active)
+            now = time.perf_counter()
+            for idx in list(active):
+                slot = active[idx]
+                req = reqs[idx]
+                tok = self._pick_token(req, rows[idx])
+                req.generated.append(tok)
+                req.token_times.append(now)
+                accepted[idx] += 1
+                # while the drafts match, the next feed IS the draft — the
+                # chain teacher-forces the speculation through serve_step
+                self.tokens[idx, 0] = tok
+                if req.on_token is not None:
+                    req.on_token(req, tok)
+                if self._hit_limit(slot, req):
+                    # finish AFTER rollback: _pin_history must only ever
+                    # see pages the rewind kept
+                    finishes.append(slot)
+                    del active[idx]
+                elif j < gamma and tok != drafts[idx][j]:
+                    del active[idx]  # draft diverged; corrected token kept
+        # ---- rollback -----------------------------------------------
+        # live rows rewind to their accepted frontier P + a; every other
+        # row (EMPTY garbage rows, mid-prefill slots) returns to its
+        # pre-round position
+        delta = np.full(B, C, np.int32)
+        for slot in live:
+            delta[slot.index] = C - accepted[slot.index]
+        self.cache["pos"] = self.cache["pos"] - jnp.asarray(
+            delta, self.cache["pos"].dtype
+        )
+        if self.pager is not None:
+            freed: List[int] = []
+            for slot in live:
+                freed += self.pager.rewind_slot(
+                    slot.index, P[slot.index] + accepted[slot.index]
+                )
+            cap = self.layout.pages_per_slot
+            for lo in range(0, len(freed), cap):
+                buf = np.full(cap, -1, np.int32)
+                chunk = freed[lo:lo + cap]
+                buf[:len(chunk)] = chunk
+                self.cache["global"] = self._zero_pages(
+                    self.cache["global"], jnp.asarray(buf)
+                )
+            self._sync_pages()
+        # zero the garbage tail rows [P+a, P+extent) across every leaf —
+        # pages the allocator freed were scrubbed wholesale above; this
+        # covers the slot layout and the paged frontier page's tail
+        extent = max(C, gamma if draft_steps else 0)
+        tpos = np.full((B, gamma + 1), kvc.OOB_INDEX, np.int32)
+        dirty = False
+        for slot in live:
+            lo = P[slot.index] + accepted[slot.index]
+            hi = min(P[slot.index] + extent, self.layout.max_seq)
+            if hi > lo:
+                tpos[slot.index, :hi - lo] = np.arange(lo, hi)
+                dirty = True
+        if dirty and self._scrub_tokens is not None:
+            if self.layout.layout == "paged":
+                self.cache["global"] = self._scrub_tokens(
+                    self.cache["global"], jnp.asarray(tpos),
+                    self.cache["page_table"],
+                )
+            else:
+                self.cache["global"] = self._scrub_tokens(
+                    self.cache["global"], jnp.asarray(tpos)
+                )
+        # ---- bookkeeping + deferred finishes -------------------------
+        self.spec_rounds += 1
+        self.spec_draft_steps += draft_steps
+        for slot in live:
+            a = accepted[slot.index]
+            req = reqs[slot.index]
+            self.spec_accepted += a
+            self.spec_drafted += gamma
+            self.spec_slot_rounds += 1
+            self.spec_max_accept = max(self.spec_max_accept, a)
+            req.spec_accepts.append(a)
+            req.spec_drafted += gamma
+        for slot in finishes:
+            self._finish(slot)
+
     def step(self) -> bool:
         """Admit/advance prefill, run one batched decode step, harvest,
         evict.
@@ -625,6 +879,12 @@ class Scheduler:
         if not live:
             self.step_count += 1
             return bool(busy)  # prefill progress still counts as work
+        if self.spec.enabled:
+            # one draft -> verify -> accept/rollback round replaces the
+            # single batched decode step (same harvesting, same eviction)
+            self.step_count += 1
+            self._spec_round(live)
+            return True
         if self.pager is not None:
             for slot in live:
                 # this decode step writes slot KV at the device pos
@@ -775,6 +1035,52 @@ class Scheduler:
             "decode_bytes_per_device_per_step": round(
                 wr["per_device"]["total"]),
         }
+        if self.spec.enabled:
+            acc = self.spec_accepted
+            kvb = self.kv_bytes_read["decode"]
+            wb = self.weight_bytes_read["decode"]
+            wr_step = wr["total"]
+            # what drafting at planes/8 of the weight bytes would cost: a
+            # truncated-plane draft step streams only the kept MSB planes,
+            # verify steps pay full freight.  With callback drafts there
+            # are zero draft steps, so modeled == measured.
+            modeled = (self.spec_draft_steps * wr_step
+                       * self.spec.planes / 8.0
+                       + self.spec_verify_steps * wr_step)
+            out["spec"] = {
+                "enabled": True,
+                "gamma": self.spec.gamma,
+                "draft_planes": self.spec.planes,
+                "draft_source": ("callback" if self.draft_fn is not None
+                                 else "planes"),
+                "rounds": self.spec_rounds,
+                "drafted_tokens": self.spec_drafted,
+                "accepted_tokens": acc,
+                "draft_steps": self.spec_draft_steps,
+                "verify_steps": self.spec_verify_steps,
+                "max_accepted_in_round": self.spec_max_accept,
+                # THE acceptance rate: true tokens per physical serve_step
+                # (draft + verify); 1.0 is the non-speculative baseline
+                "accepted_tokens_per_step": round(
+                    acc / self.decode_steps, 4) if self.decode_steps else None,
+                "accepted_tokens_per_round": round(
+                    acc / self.spec_slot_rounds, 4
+                ) if self.spec_slot_rounds else None,
+                # drafts that survived verification (each slot-round's
+                # first accepted token is the free corrected one)
+                "draft_hit_rate": round(
+                    (acc - self.spec_slot_rounds) / self.spec_drafted, 4
+                ) if self.spec_drafted else None,
+                # the ISSUE's headline columns: decode-path bytes per
+                # ACCEPTED token, next to kv_read/weight_read's per-step
+                # prices (bytes/accepted == bytes/step / acceptance-rate)
+                "kv_bytes_per_accepted_token": round(kvb / acc)
+                if acc else None,
+                "weight_bytes_per_accepted_token": round(wb / acc)
+                if acc else None,
+                "modeled_weight_bytes_per_accepted_token": round(modeled / acc)
+                if acc else None,
+            }
         if "bgpp" in dr:
             out["kv_read"]["bgpp"] = {
                 n: round(v) if isinstance(v, float) else v

@@ -1,0 +1,195 @@
+"""Bit-plane speculative decoding: draft with truncated MSB planes, verify
+batched through ``serve_step``, accept/rollback per slot.
+
+MCBP's thesis is that MSB bit-planes are cheap, informative predictors.
+BGPP already uses them to prune what decode *reads*; this module extends
+the same signal to token *drafting* (ROADMAP item 3): the draft scorer is
+the ordinary compiled ``serve_step`` run with **truncated-plane weights**
+— every projection quantized to int8 and keeping only the top
+``draft_planes`` MSB magnitude bits (:func:`truncate_plane_params`), so a
+draft forward models reading ``planes/8`` of the weight bytes while
+reusing the exact compiled graph (same tree structure, shapes, dtypes —
+no second compilation, and it composes with every ``weight_format``).
+
+One speculative round per scheduler step (``Scheduler._spec_round``):
+
+  1. **draft** — ``gamma`` serve_steps with the truncated weights (greedy
+     argmax fed forward) propose ``gamma`` tokens per DECODING slot, then
+     the draft chain's ``pos`` drift is rewound;
+  2. **verify** — up to ``gamma + 1`` serve_steps with the REAL weights,
+     feeding the *draft* tokens; each step's exact logits yield the true
+     token through the scheduler's ``forced_tokens``/greedy
+     ``_pick_token`` path, and a slot stays in the chain while its drafts
+     keep matching (accepted tokens per slot per round: 1 — the corrected
+     token — up to ``gamma + 1`` — all drafts plus the bonus token);
+  3. **rollback** — per-slot ``pos`` rewind to the accepted frontier,
+     paged pages past it decref'd/invalidated
+     (:meth:`~repro.serving.paging.PageAllocator.rewind_slot` — generation
+     counters make a freed page unresurrectable by stale prefix-index
+     entries), and the garbage tail rows zeroed across every store leaf
+     (:func:`~repro.serving.kv_cache.zero_token_range`).
+
+Verification is greedy-argmax over exact logits, so speculative output is
+**bit-identical** to non-speculative greedy decode — the fuzz oracle
+(``tests/test_serving_fuzz.py``, ``spec_decode`` axis) enforces it across
+kv-format × layout × admission, with adversarially-wrong drafts.
+
+Why rollback is safe at all: ``serve_step`` is write-then-attend with
+per-slot validity masks (``arange <= pos``) and OOB-scatter-drop writes,
+so a position's stale contents are always overwritten in the same step
+that first makes them visible; rewinding ``pos`` is therefore sufficient
+on the slot layout, and the paged layout additionally needs the allocator
+rewind so a freed/partially-written page can never service a later
+prefix-index hit.
+
+Supported on **global-only attention stacks** (same legality rule as
+prefix reuse): sliding-window ring layers physically overwrite window
+lanes on every speculative write, which no ``pos`` rewind can undo.  The
+``REPRO_SPEC_DECODE`` env value means "speculative where supported" — an
+env-driven enable soft-disables on a local-layer stack (CI matrices flip
+one switch for the whole zoo), while an explicit config/kwarg enable
+raises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ENV_ENABLE = "REPRO_SPEC_DECODE"
+ENV_GAMMA = "REPRO_DRAFT_GAMMA"
+ENV_PLANES = "REPRO_DRAFT_PLANES"
+
+_TRUE = ("1", "on", "true", "yes")
+_FALSE = ("0", "off", "false", "no")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Resolved speculative-decoding knobs for one Scheduler build.
+
+    ``source`` records where the *enable* decision came from (``"kwarg"``
+    / ``"env"`` / ``"config"``) — :func:`validate` soft-disables an
+    env-driven enable on unsupported stacks but hard-fails an explicit
+    one.
+    """
+
+    enabled: bool
+    gamma: int
+    planes: int
+    source: str
+
+
+def _env_bool(var: str) -> Optional[bool]:
+    raw = os.environ.get(var, "").strip().lower()
+    if not raw:
+        return None
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    raise ValueError(
+        f"${var}={raw!r} is not a boolean (use one of {_TRUE + _FALSE})"
+    )
+
+
+def _env_int(var: str) -> Optional[int]:
+    raw = os.environ.get(var, "").strip()
+    return int(raw) if raw else None
+
+
+def resolve(cfg, enabled: Optional[bool] = None, gamma: Optional[int] = None,
+            planes: Optional[int] = None) -> SpecConfig:
+    """Resolve the spec-decode knobs: kwarg > env > config.
+
+    Explicit Scheduler kwargs win so oracles can pin spec on/off per run
+    regardless of the CI matrix; ``REPRO_SPEC_DECODE`` /
+    ``REPRO_DRAFT_GAMMA`` / ``REPRO_DRAFT_PLANES`` override the config so
+    nightly matrices can flip the whole zoo without touching configs —
+    the same contract as ``weights.resolve`` / ``kernel_decode.resolve``.
+    """
+    mo = cfg.mcbp
+    if enabled is not None:
+        on, source = bool(enabled), "kwarg"
+    else:
+        env = _env_bool(ENV_ENABLE)
+        if env is not None:
+            on, source = env, "env"
+        else:
+            on, source = bool(getattr(mo, "spec_decode", False)), "config"
+    g = gamma if gamma is not None else _env_int(ENV_GAMMA)
+    if g is None:
+        g = getattr(mo, "draft_gamma", 4)
+    p = planes if planes is not None else _env_int(ENV_PLANES)
+    if p is None:
+        p = getattr(mo, "draft_planes", 4)
+    g, p = int(g), int(p)
+    if g < 1:
+        raise ValueError(f"draft_gamma={g} must be >= 1")
+    if not 1 <= p <= 8:
+        raise ValueError(f"draft_planes={p} must be in 1..8")
+    return SpecConfig(enabled=on, gamma=g, planes=p, source=source)
+
+
+def validate(cfg, layout, spec: SpecConfig) -> SpecConfig:
+    """Check a resolved :class:`SpecConfig` against (cfg, layout).
+
+    Speculative decoding needs every attention layer rollback-safe, which
+    only global stacks are (ring buffers overwrite window lanes on every
+    speculative write — see the module docstring).  An env-driven enable
+    on a local-layer stack returns a *disabled* copy (the nightly matrix
+    semantics: "speculative where supported"); an explicit config/kwarg
+    enable raises with the legality rule spelled out.
+    """
+    if not spec.enabled:
+        return spec
+    if getattr(layout, "local_layers", None):
+        if spec.source == "env":
+            return dataclasses.replace(spec, enabled=False)
+        raise ValueError(
+            "spec_decode=True needs a rollback-safe cache: sliding-window "
+            "ring layers overwrite window lanes on every speculative write "
+            f"(layout has local layers {layout.local_layers}).  Use a "
+            "global-only attention stack, or leave spec_decode off — the "
+            "same legality rule as paged prefix reuse."
+        )
+    return spec
+
+
+def truncate_plane_params(params, planes: int):
+    """Truncated-bit-plane draft weights: per-tensor symmetric int8
+    quantization keeping only the top ``planes`` MSB magnitude bits.
+
+    Every floating leaf is quantized at ``scale = max|w| / 127`` (int8: 7
+    magnitude bits + sign), its magnitude masked to the ``planes`` most
+    significant bits (``planes >= 7`` keeps all of int8 — the tree is
+    returned unchanged, a *perfect* draft model), and dequantized back to
+    the leaf's dtype.  The result has the exact tree structure, shapes
+    and dtypes of ``params``, so the compiled ``serve_step`` executable
+    is reused as the draft forward — and
+    ``weights.prepare_serve_params`` applies on top for int8/bstc
+    serving, exactly as for the real weights.
+    """
+    planes = int(planes)
+    if not 1 <= planes <= 8:
+        raise ValueError(f"draft_planes={planes} must be in 1..8")
+    if planes >= 7:
+        return params
+    shift = 7 - planes
+
+    def trunc(w):
+        if not hasattr(w, "dtype") or not jnp.issubdtype(
+            jnp.asarray(w).dtype, jnp.floating
+        ):
+            return w
+        wf = jnp.asarray(w).astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(wf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int32)
+        kept = jnp.right_shift(jnp.abs(q), shift) << shift
+        return (jnp.sign(q) * kept * scale).astype(w.dtype)
+
+    return jax.tree_util.tree_map(trunc, params)

@@ -119,6 +119,98 @@ def test_pool_exhaustion_is_loud():
 
 
 # --------------------------------------------------------------------------
+# rewind: speculative-decode rollback (pos frontier moves backwards)
+# --------------------------------------------------------------------------
+
+
+def test_rewind_deregisters_prefix_entries_past_keep():
+    """Regression (spec-decode satellite): rolling a slot back across a
+    page boundary must deregister every sha1 prefix-index entry covering
+    now-invalid pages.  Before the fix a rewound slot's stale 16/24-token
+    entries would still hit for a later prompt and adopt pages whose tail
+    tokens were never (re)written."""
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    prompt = np.arange(24, dtype=np.int32)
+    pager.ensure_range(0, 0, 24)
+    pager.register_prefix(0, prompt, upto=24)
+    probe = np.concatenate([prompt, [99]]).astype(np.int32)
+    n, ids = pager.lookup_prefix(probe)
+    assert n == 24 and len(ids) == 3
+    # rewind to keep 10 tokens: page 2 (tokens 16..24) frees outright,
+    # page 1 (8..16) is the partially-kept frontier — the 16- and
+    # 24-token boundary digests it carries must BOTH dereg, while the
+    # wholly-kept page-0 boundary survives
+    freed = pager.rewind_slot(0, 10)
+    pager.check()
+    assert freed == [int(ids[2])]
+    assert int(pager.table[0, 2]) == -1
+    n, hit = pager.lookup_prefix(probe)
+    assert n == 8 and list(hit) == [int(ids[0])], (
+        f"rewound prefix entries must miss: matched {n} tokens")
+
+
+def test_rewind_page_aligned_keeps_covered_boundaries():
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    prompt = np.arange(24, dtype=np.int32)
+    pager.ensure_range(0, 0, 24)
+    pager.register_prefix(0, prompt, upto=24)
+    probe = np.concatenate([prompt, [99]]).astype(np.int32)
+    # keep == a page boundary: pages 0/1 stay fully written, so their
+    # 8- and 16-token boundaries remain legal adoption targets
+    freed = pager.rewind_slot(0, 16)
+    pager.check()
+    assert len(freed) == 1
+    n, hit = pager.lookup_prefix(probe)
+    assert n == 16 and len(hit) == 2
+
+
+def test_rewind_bumps_generation_against_resurrection():
+    """A page freed by rewind must be unresurrectable: even if another
+    slot re-acquires the same physical page, pre-rewind index entries
+    (had any survived) die at the generation check, and re-registering
+    after the rewind starts from the rewound frontier."""
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    prompt = np.arange(16, dtype=np.int32)
+    pager.ensure_range(0, 0, 16)
+    pager.register_prefix(0, prompt, upto=16)
+    freed = pager.rewind_slot(0, 0)  # rewind everything away
+    pager.check()
+    assert len(freed) == 2 and pager.pages_in_use == 0
+    probe = np.concatenate([prompt, [99]]).astype(np.int32)
+    assert pager.lookup_prefix(probe) == (0, ())
+    pager.ensure_range(1, 0, 16)  # same physical pages, new generation
+    assert pager.lookup_prefix(probe) == (0, ())
+    pager.check()
+    # the rewound slot itself re-registers from scratch
+    pager.ensure_range(0, 0, 16)
+    pager.register_prefix(0, prompt, upto=16)
+    n, _ = pager.lookup_prefix(probe)
+    assert n == 16
+
+
+def test_rewind_refuses_to_corrupt_shared_frontier():
+    """The frontier page can never legally be shared (adopted pages cover
+    at most prompt_len - 1 < keep tokens), so a shared-frontier rewind is
+    allocator corruption and must be loud."""
+    _, layout = _layout()
+    pager = PageAllocator(layout)
+    prompt = np.arange(24, dtype=np.int32)
+    pager.ensure_range(0, 0, 24)
+    pager.register_prefix(0, prompt, upto=24)
+    _, ids = pager.lookup_prefix(np.concatenate([prompt, [99]])
+                                 .astype(np.int32))
+    pager.adopt_prefix(1, ids)
+    with pytest.raises(AssertionError, match="shared page"):
+        pager.rewind_slot(0, 12)  # page 1 shared AND partially kept
+    # page-aligned rewinds around the shared region stay legal
+    pager.rewind_slot(0, 24)
+    pager.check()
+
+
+# --------------------------------------------------------------------------
 # pins: residency held by no slot (chat-session keep-alives)
 # --------------------------------------------------------------------------
 

@@ -13,6 +13,8 @@ from repro.core import attention, bstc
 from repro.models import model_zoo, moe
 from repro.serving import kv_cache as kvc
 from repro.serving import weights as swt
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -299,6 +301,171 @@ class TestWeightReadAccountingLaws:
         # raw pricing (no sparsity) is plain int8 + scales
         raw = bstc_weight_traffic(128, 64)
         np.testing.assert_allclose(raw["bstc_bytes"], raw["int8_bytes"])
+
+
+class TestSpecDecodeAccountingLaws:
+    """Laws of the speculative-decoding counters (Scheduler._spec_round):
+    per-slot-round acceptance is bounded by gamma + 1, per-request rows
+    reconcile with the global counters and with the kv/weight byte
+    totals, bytes-per-accepted-token is exactly bytes-per-step divided by
+    the acceptance rate, perfect drafts bank gamma + 1 tokens every full
+    round, and adversarially-wrong drafts degrade to exactly the one
+    corrected token per round — never worse, never silently better."""
+
+    GAMMA = 3
+    _CACHE = {}
+
+    @classmethod
+    def _runs(cls):
+        """One reference (non-spec) run plus three speculative runs over
+        the SAME deterministic trace: perfect drafts (callback feeding the
+        reference's own tokens), adversarial drafts (always wrong), and
+        truncated-plane drafts — cached; every law reads these."""
+        if not cls._CACHE:
+            cfg = get_config("phi4-mini-3.8b", smoke=True)
+            params, _ = model_zoo.init(jax.random.key(0), cfg)
+            lay = kvc.layout_for(cfg, 2, 48, kv_format="bf16")
+            rng = np.random.default_rng(0)
+            protos = [Request(
+                rid=i,
+                prompt=rng.integers(
+                    0, cfg.vocab_size, (int(rng.integers(4, 14)),)
+                ).astype(np.int32),
+                # budgets straddle multiples of gamma + 1 so perfect
+                # drafts produce both full and truncated final rounds
+                max_new_tokens=[8, 9, 5][i],
+                arrival_step=3 * i,
+            ) for i in range(3)]
+
+            def clones():
+                return [Request(rid=r.rid, prompt=r.prompt,
+                                max_new_tokens=r.max_new_tokens,
+                                arrival_step=r.arrival_step)
+                        for r in protos]
+
+            def drive(sched, reqs):
+                for r in reqs:
+                    sched.submit(r)
+                sched.run(max_steps=1000)
+                assert len(sched.finished) == len(reqs)
+                return sched, {r.rid: r for r in sched.finished}
+
+            ref, truth = drive(
+                Scheduler(params, cfg, lay, chunk_budget=6,
+                          spec_decode=False), clones())
+            tokens = {rid: list(r.generated) for rid, r in truth.items()}
+            shared = ref.shared_fns()
+            g = cls.GAMMA
+
+            def perfect(req, t):
+                seq = tokens[req.rid]
+                return seq[t] if t < len(seq) else 0
+
+            def adversarial(req, t):
+                seq = tokens[req.rid]
+                true = seq[t] if t < len(seq) else 0
+                return (true + 1) % cfg.vocab_size
+
+            cls._CACHE["truth"] = tokens
+            for name, kw in (
+                ("perfect", {"draft_fn": perfect}),
+                ("adversarial", {"draft_fn": adversarial}),
+                ("planes", {"draft_planes": 2}),
+            ):
+                sched, fin = drive(
+                    Scheduler(params, cfg, lay, chunk_budget=6,
+                              spec_decode=True, draft_gamma=g,
+                              shared_fns=shared, **kw), clones())
+                cls._CACHE[name] = (sched, fin)
+        return cls._CACHE
+
+    def test_outputs_bit_identical_to_reference(self):
+        runs = self._runs()
+        for name in ("perfect", "adversarial", "planes"):
+            _, fin = runs[name]
+            for rid, seq in runs["truth"].items():
+                assert fin[rid].generated == seq, (name, rid)
+
+    def test_accepted_bounded_by_gamma_plus_one(self):
+        runs = self._runs()
+        for name in ("perfect", "adversarial", "planes"):
+            _, fin = runs[name]
+            for r in fin.values():
+                assert r.spec_accepts, (name, r.rid)
+                assert all(1 <= a <= self.GAMMA + 1
+                           for a in r.spec_accepts), (name, r.rid,
+                                                      r.spec_accepts)
+
+    def test_per_request_rows_reconcile_with_globals(self):
+        runs = self._runs()
+        for name in ("perfect", "adversarial", "planes"):
+            sched, fin = runs[name]
+            reqs = list(fin.values())
+            assert sum(sum(r.spec_accepts) for r in reqs) \
+                == sched.spec_accepted, name
+            assert sum(len(r.spec_accepts) for r in reqs) \
+                == sched.spec_slot_rounds, name
+            assert sum(r.spec_drafted for r in reqs) == sched.spec_drafted
+            assert sched.spec_drafted \
+                == self.GAMMA * sched.spec_slot_rounds, name
+            for r in reqs:
+                # every decode-path token was accepted in some round (the
+                # first token comes from prefill, not from decode)
+                assert sum(r.spec_accepts) == len(r.generated) - 1, \
+                    (name, r.rid)
+
+    def test_counters_reconcile_with_byte_totals(self):
+        runs = self._runs()
+        for name in ("perfect", "adversarial", "planes"):
+            sched, _ = runs[name]
+            stats = sched.stats()
+            sp, kv, wr = stats["spec"], stats["kv_read"], \
+                stats["weight_read"]
+            assert sp["accepted_tokens"] == stats["decoded_tokens"], name
+            assert kv["decode_steps"] \
+                == sp["draft_steps"] + sp["verify_steps"], name
+            assert kv["decode_bytes"] \
+                == kv["decode_steps"] * kv["decode_bytes_per_step"], name
+            if name != "planes":  # callback drafts run no device steps
+                assert sp["draft_steps"] == 0, name
+                np.testing.assert_allclose(
+                    sp["modeled_weight_bytes_per_accepted_token"],
+                    sp["weight_bytes_per_accepted_token"], atol=1)
+
+    def test_bytes_per_accepted_is_per_step_over_acceptance_rate(self):
+        runs = self._runs()
+        for name in ("perfect", "adversarial", "planes"):
+            sched, _ = runs[name]
+            stats = sched.stats()
+            sp, kv, wr = stats["spec"], stats["kv_read"], \
+                stats["weight_read"]
+            rate = sp["accepted_tokens"] / kv["decode_steps"]
+            np.testing.assert_allclose(
+                kv["decode_bytes"] / sp["accepted_tokens"],
+                kv["decode_bytes_per_step"] / rate, rtol=1e-12)
+            np.testing.assert_allclose(
+                wr["decode_bytes"] / sp["accepted_tokens"],
+                wr["decode_bytes_per_step"] / rate, rtol=1e-12)
+
+    def test_perfect_drafts_accept_gamma_plus_one_per_full_round(self):
+        _, fin = self._runs()["perfect"]
+        for r in fin.values():
+            # every round except the request's last banks gamma + 1; the
+            # final round is truncated only by the decode budget
+            assert all(a == self.GAMMA + 1 for a in r.spec_accepts[:-1]), \
+                (r.rid, r.spec_accepts)
+            assert sum(r.spec_accepts) == len(r.generated) - 1
+        sched, _ = self._runs()["perfect"]
+        assert sched.spec_max_accept == self.GAMMA + 1
+
+    def test_adversarial_drafts_accept_exactly_one_per_round(self):
+        sched, fin = self._runs()["adversarial"]
+        for r in fin.values():
+            assert all(a == 1 for a in r.spec_accepts), (r.rid,
+                                                         r.spec_accepts)
+        sp = sched.stats()["spec"]
+        assert sp["accepted_tokens_per_round"] == 1.0
+        assert sp["draft_hit_rate"] == 0.0
 
 
 class TestDispatchRoundTripLaws:

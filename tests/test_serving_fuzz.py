@@ -22,6 +22,14 @@ cancels/disconnects into the joint run: ``PageAllocator.check()`` must
 hold after every step, the pool must drain to zero pages, and every
 SURVIVING request must still match its alone run to the same bars.
 
+The spec_decode axis (TestSpecDecodeFuzz) runs the joint trace through
+speculative decoding — random ``gamma``, random draft quality including
+adversarially-wrong drafts — and compares against NON-speculative alone
+runs: speculation may only change how many serve_steps were spent, never
+a single token or logit bit, and every draft/verify/rollback round must
+leave the page allocator clean (``check()`` between steps, zero pages
+leaked at the end).
+
 The seed comes from the ``rng_seed`` fixture (stable per test node id) and
 can be pinned via ``REPRO_FUZZ_SEED`` — CI runs the kv-format × layout
 matrix with a fixed seed; the nightly workflow runs the ``slow`` suite
@@ -139,8 +147,9 @@ def _dump_failing_trace(meta, reqs):
 
 
 def _run(cfg, params, layout, reqs, shared=None, admission="chunked",
-         rules=None):
+         rules=None, sched_kw=None):
     kw = {} if rules is None else {"rules": rules}
+    kw.update(sched_kw or {})
     sched = Scheduler(
         params, cfg, layout, admission=admission, chunk_budget=CHUNK_BUDGET,
         record_logits=True, shared_fns=shared,
@@ -174,7 +183,7 @@ def _run(cfg, params, layout, reqs, shared=None, admission="chunked",
 
 def _compare_to_alone_runs(cfg, params, reqs, joint, arch_key, kv_format,
                            layout, joint_shared=None, slots=SLOTS,
-                           admission="chunked"):
+                           admission="chunked", alone_kw=None):
     """Re-run each request alone on the SLOT layout and compare — the slot
     path is the oracle for both layouts.  ``joint_shared``: the joint
     scheduler's compiled fns, reusable only when the joint run itself was
@@ -182,13 +191,16 @@ def _compare_to_alone_runs(cfg, params, reqs, joint, arch_key, kv_format,
     reductions are only bit-stable at a fixed batch shape.  ``admission``
     must match the joint run's too — eager (whole-forward) and chunked
     (cache-attend) prefills produce their first-token logits through
-    different float paths, so each admission mode oracles against itself."""
+    different float paths, so each admission mode oracles against itself.
+    ``alone_kw``: extra Scheduler kwargs for the alone runs — the spec
+    axis pins them non-speculative regardless of REPRO_SPEC_DECODE."""
     exact = kv_format == "bf16"
     slot_layout = _layout_for(cfg, kv_format, "slot", slots=slots)
     shared = joint_shared
     for r in reqs:
         alone_sched, alone = _run(cfg, params, slot_layout, [_clone(r, 0)],
-                                  shared=shared, admission=admission)
+                                  shared=shared, admission=admission,
+                                  sched_kw=alone_kw)
         shared = alone_sched.shared_fns()
         got, want = joint[r.rid], alone[r.rid]
         assert len(got.generated) == len(want.generated)
@@ -272,9 +284,14 @@ def _shared_prefix_oracle(kv_format, seed):
     meta = {"oracle": "shared-prefix", "arch": "dense",
             "kv_format": kv_format, "layout": "paged", "seed": seed}
     with _dump_failing_trace(meta, reqs):
+        # pinned non-speculative: the scenario's residency window assumes
+        # one token per decode step (rid 0 must still hold its pages when
+        # rid 2 advances); the spec × adoption interplay has its own
+        # long-donor scenario in TestSpecDecodeFuzz
         joint_sched, joint = _run(
             cfg, params, _layout_for(cfg, kv_format, "paged", slots=3),
             [_clone(r, r.arrival_step) for r in reqs],
+            sched_kw={"spec_decode": False},
         )
         assert joint_sched.prefix_hit_tokens >= 64, (
             f"both late requests must adopt the 32-token prefix: "
@@ -355,6 +372,195 @@ class TestWeightFormatOracle:
     def test_swa_slot(self, rng_seed, weight_format):
         _fuzz_oracle("swa", "bf16", rng_seed, 4,
                      weight_format=weight_format)
+
+
+# --------------------------------------------------------------------------
+# spec_decode axis: speculative greedy must be BIT-identical to non-spec
+# --------------------------------------------------------------------------
+
+
+def _run_spec(cfg, params, layout, reqs, sched_kw, admission="chunked"):
+    """Joint speculative run with the leak gates armed between steps:
+    ``PageAllocator.check()`` after EVERY draft/verify/rollback round, a
+    fully drained pool at the end, and the byte-accounting laws intact
+    (every physical serve_step — draft or verify — pays the full static
+    per-step price)."""
+    sched = Scheduler(params, cfg, layout, admission=admission,
+                      chunk_budget=CHUNK_BUDGET, record_logits=True,
+                      prefill_kw=dict(block_q=16, block_k=32)
+                      if admission == "eager" else None,
+                      **sched_kw)
+    assert sched.spec.enabled, "spec axis requires an enabled scheduler"
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(2000):
+        if not sched.num_pending:
+            break
+        sched.step()
+        if sched.pager is not None:
+            sched.pager.check()
+    assert not sched.num_pending, "trace did not drain"
+    assert len(sched.finished) == len(reqs)
+    stats = sched.stats()
+    kv, wr, sp = stats["kv_read"], stats["weight_read"], stats["spec"]
+    assert kv["decode_bytes"] == kv["decode_steps"] * kv["decode_bytes_per_step"]
+    assert wr["decode_bytes"] == wr["decode_steps"] * wr["decode_bytes_per_step"]
+    assert sp["rounds"] > 0, "the trace never actually speculated"
+    assert sp["accepted_tokens"] == stats["decoded_tokens"]
+    if sched.pager is not None:
+        sched.pager.check()
+        assert sched.pager.pages_in_use == 0, "spec rollback leaked pages"
+    return sched, {r.rid: r for r in sched.finished}
+
+
+def _spec_fuzz_oracle(arch_key, kv_format, seed, n_requests, layout,
+                      draft="planes", admission="chunked"):
+    """The tentpole oracle: a speculative joint run (random gamma, random
+    draft quality — truncated planes, perfect, or adversarially wrong) is
+    compared against NON-speculative slot-layout alone runs, to the same
+    bars as the base oracle (bit-exact bf16 / 1e-5 teacher-forced).
+    Wrong drafts may only cost steps, never change a single logit."""
+    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
+    rng = np.random.default_rng(seed)
+    cfg, params = _model(arch_key)
+    teacher = kv_format != "bf16"
+    reqs = _random_requests(rng, cfg, n_requests, teacher_forced=teacher)
+    gamma = int(rng.integers(1, 5))
+    sched_kw = {"spec_decode": True, "draft_gamma": gamma}
+    if draft == "planes":
+        # planes >= 7 makes the serve weights the (perfect) draft model,
+        # so the random range also covers high-acceptance rounds
+        sched_kw["draft_planes"] = int(rng.integers(1, 9))
+    elif draft == "adversarial":
+        drng = np.random.default_rng(seed + 1)
+        sched_kw["draft_fn"] = \
+            lambda req, t: int(drng.integers(0, cfg.vocab_size))
+    elif draft == "perfect":
+        assert teacher, "perfect drafts read the teacher-forced tail"
+        sched_kw["draft_fn"] = lambda req, t: (
+            int(req.forced_tokens[t]) if t < len(req.forced_tokens) else 0)
+    else:
+        raise ValueError(draft)
+    meta = {"oracle": "spec-fuzz", "arch": arch_key, "kv_format": kv_format,
+            "layout": layout, "draft": draft, "gamma": gamma,
+            "planes": sched_kw.get("draft_planes", 0), "seed": seed,
+            "admission": admission}
+    with _dump_failing_trace(meta, reqs):
+        joint_sched, joint = _run_spec(
+            cfg, params, _layout_for(cfg, kv_format, layout),
+            [_clone(r, r.arrival_step) for r in reqs], sched_kw,
+            admission=admission)
+        sp = joint_sched.stats()["spec"]
+        if draft == "perfect":
+            for r in joint.values():
+                assert all(a == gamma + 1 for a in r.spec_accepts[:-1]), \
+                    (r.rid, r.spec_accepts)
+        for r in joint.values():
+            assert all(1 <= a <= gamma + 1 for a in r.spec_accepts)
+            assert sum(r.spec_accepts) == len(r.generated) - 1
+        assert sp["drafted_tokens"] == gamma * joint_sched.spec_slot_rounds
+        # the alone runs are pinned NON-speculative (kwarg beats any
+        # REPRO_SPEC_DECODE in the environment): spec vs non-spec IS the
+        # comparison, on top of joint-vs-alone scheduling invariance
+        _compare_to_alone_runs(
+            cfg, params, reqs, joint, arch_key, kv_format, layout,
+            joint_shared=joint_sched.shared_fns()
+            if layout == "slot" else None,
+            admission=admission,
+            alone_kw={"spec_decode": False},
+        )
+
+
+def _spec_prefix_oracle(seed):
+    """Speculation over ADOPTED pages: request 0 prefills a 32-token
+    prefix and keeps speculating long enough (24 decode tokens, so >= 6
+    rounds even at full gamma+1 acceptance) that requests 1/2 arrive and
+    adopt its prompt pages while its rollback path is live.  Every
+    ``rewind_slot`` in the trace therefore runs against a pool holding
+    shared pages — the frontier-sharing guard and the digest dereg must
+    leave the adopted prefix intact, both late requests must hit it, and
+    the logits must still match non-speculative alone runs exactly."""
+    seed = int(os.environ.get("REPRO_FUZZ_SEED", seed))
+    rng = np.random.default_rng(seed)
+    cfg, params = _model("dense")
+    prefix = rng.integers(0, cfg.vocab_size, (32,)).astype(np.int32)
+
+    def req(rid, tail_len, max_new, arrival):
+        return Request(
+            rid=rid,
+            prompt=np.concatenate([prefix, rng.integers(
+                0, cfg.vocab_size, (tail_len,)).astype(np.int32)]),
+            max_new_tokens=max_new,
+            arrival_step=arrival,
+        )
+
+    reqs = [req(0, 4, 24, 0), req(1, 5, 4, 8), req(2, 3, 3, 8)]
+    sched_kw = {"spec_decode": True, "draft_gamma": 3, "draft_planes": 4}
+    meta = {"oracle": "spec-prefix", "arch": "dense", "kv_format": "bf16",
+            "layout": "paged", "draft": "planes", "gamma": 3, "planes": 4,
+            "seed": seed}
+    with _dump_failing_trace(meta, reqs):
+        joint_sched, joint = _run_spec(
+            cfg, params, _layout_for(cfg, "bf16", "paged", slots=3),
+            [_clone(r, r.arrival_step) for r in reqs], sched_kw)
+        assert joint_sched.prefix_hit_tokens >= 64, (
+            f"both late requests must adopt the 32-token prefix: "
+            f"{joint_sched.prefix_hit_tokens} tokens adopted"
+        )
+        _compare_to_alone_runs(cfg, params, reqs, joint, "dense", "bf16",
+                               "paged", slots=3,
+                               alone_kw={"spec_decode": False})
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+class TestSpecDecodeFuzz:
+    """spec_decode axis of the fuzz matrix (tentpole acceptance): the
+    speculative scheduler's output must be bit-identical to
+    non-speculative greedy decode on bf16 (<= 1e-5 teacher-forced on
+    int8/bgpp), across layouts and draft qualities, with the page
+    allocator clean after every round and zero pages leaked."""
+
+    def test_spec_dense_bf16_planes(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "bf16", rng_seed, 4, layout)
+
+    def test_spec_dense_bf16_adversarial(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "bf16", rng_seed, 4, layout,
+                          draft="adversarial")
+
+    def test_spec_dense_int8_perfect(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "int8", rng_seed, 4, layout,
+                          draft="perfect")
+
+    def test_spec_dense_bgpp_adversarial(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "bgpp", rng_seed, 4, layout,
+                          draft="adversarial")
+
+    def test_spec_dense_bf16_eager(self, rng_seed, layout):
+        # eager (whole-forward) admission: speculation only touches decode
+        # rounds, so it must be transparent under either prefill path
+        _spec_fuzz_oracle("dense", "bf16", rng_seed, 4, layout,
+                          admission="eager")
+
+    @pytest.mark.slow
+    def test_spec_dense_int8_planes(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "int8", rng_seed, 4, layout)
+
+    @pytest.mark.slow
+    def test_spec_dense_bgpp_perfect(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "bgpp", rng_seed, 4, layout,
+                          draft="perfect")
+
+    @pytest.mark.slow
+    def test_spec_dense_bf16_heavy(self, rng_seed, layout):
+        _spec_fuzz_oracle("dense", "bf16", rng_seed + 1, 7, layout)
+
+
+class TestSpecPrefixAdoption:
+    """Rollback-heavy speculation while other slots share the donor's
+    prompt pages (paged layout only — adoption is a page concept)."""
+
+    def test_spec_prefix_reuse_paged_bf16(self, rng_seed):
+        _spec_prefix_oracle(rng_seed)
 
 
 # --------------------------------------------------------------------------
